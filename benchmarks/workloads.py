@@ -1,0 +1,111 @@
+"""Benchmark workload builders — analogs of the paper's two applications.
+
+* :func:`build_timing_analysis` — paper §IV-A / Fig. 5: N independent
+  *view* pipelines, each ``host(extract) → pull(features) →
+  kernel(logistic-regression GD) → push(model)``.  Embarrassingly
+  parallel across views; stresses placement balance + copy/compute
+  overlap.
+* :func:`build_detailed_placement` — paper §IV-B / Fig. 8: a flattened
+  iterative graph; every iteration chains ``kernel(MIS) →
+  host(partition) → kernel(bipartite matching)`` with a dependency into
+  the next iteration — irregular and dependent, the workload where the
+  paper observes saturation (~20 cores, 1 GPU sufficient).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Heteroflow
+
+
+@jax.jit
+def _logreg_step(x, y, w):
+    """One gradient-descent step of logistic regression (view kernel)."""
+    p = jax.nn.sigmoid(x @ w)
+    grad = x.T @ (p - y) / x.shape[0]
+    return w - 0.5 * grad
+
+
+def build_timing_analysis(n_views: int, n_samples: int = 512,
+                          n_features: int = 64, gd_steps: int = 4):
+    """Returns (graph, outputs) — one pipeline per timing view."""
+    G = Heteroflow("timing_analysis")
+    outputs = []
+    rng = np.random.default_rng(0)
+    for v in range(n_views):
+        x = rng.normal(size=(n_samples, n_features)).astype(np.float32)
+        y = (rng.random(n_samples) > 0.5).astype(np.float32)
+        w_out = np.zeros(n_features, np.float32)
+
+        feats = {"x": None, "y": None}
+
+        def extract(x=x, y=y, feats=feats):
+            feats["x"] = x - x.mean(0)          # host-side feature prep
+            feats["y"] = y
+
+        h = G.host(extract, name=f"extract{v}")
+        px = G.pull(lambda feats=feats: feats["x"], name=f"pull_x{v}")
+        py = G.pull(lambda feats=feats: feats["y"], name=f"pull_y{v}")
+        pw = G.pull(np.zeros(n_features, np.float32), name=f"pull_w{v}")
+
+        def regress(x, y, w, steps=gd_steps):
+            for _ in range(steps):
+                w = _logreg_step(x, y, w)
+            return w
+
+        k = G.kernel(regress, px, py, pw, writes=(pw,), cost=float(n_samples),
+                     name=f"regress{v}")
+        out = G.push(pw, w_out, name=f"push{v}")
+        h.precede(px, py)
+        k.succeed(px, py, pw).precede(out)
+        outputs.append(w_out)
+    return G, outputs
+
+
+@jax.jit
+def _mis_kernel(adj, scores):
+    """One Blelloch-style MIS round: keep local maxima."""
+    neigh_max = (adj * scores[None, :]).max(axis=1)
+    return (scores > neigh_max).astype(jnp.float32)
+
+
+@jax.jit
+def _matching_kernel(weights, mask):
+    """Greedy row-max bipartite matching score (placement objective)."""
+    masked = weights * mask[:, None]
+    return masked.max(axis=1).sum()
+
+
+def build_detailed_placement(n_iters: int, n_cells: int = 256):
+    """Flattened iterative placement graph (paper Fig. 8)."""
+    G = Heteroflow("detailed_placement")
+    rng = np.random.default_rng(1)
+    adj = (rng.random((n_cells, n_cells)) < 0.05).astype(np.float32)
+    adj = np.maximum(adj, adj.T)
+    np.fill_diagonal(adj, 0)
+    weights = rng.random((n_cells, n_cells)).astype(np.float32)
+    objective = []
+
+    p_adj = G.pull(adj, name="pull_adj")
+    p_w = G.pull(weights, name="pull_w")
+    prev_tail = None
+    for it in range(n_iters):
+        scores = rng.random(n_cells).astype(np.float32)
+        p_scores = G.pull(scores, name=f"pull_scores[{it}]")
+        mis = G.kernel(_mis_kernel, p_adj, p_scores,
+                       cost=float(n_cells), name=f"mis[{it}]")
+        part = G.host(lambda: None, name=f"partition[{it}]")  # sequential
+        match = G.kernel(_matching_kernel, p_w, mis,
+                         cost=float(n_cells), name=f"match[{it}]")
+        sink = G.host(
+            lambda m=match: objective.append(float(m._node.state["result"])),
+            name=f"collect[{it}]")
+        mis.succeed(p_adj, p_scores).precede(part)
+        part.precede(match)
+        match.succeed(p_w).precede(sink)
+        if prev_tail is not None:
+            prev_tail.precede(mis)        # iteration dependency
+        prev_tail = sink
+    return G, objective

@@ -1,0 +1,123 @@
+"""End-to-end training driver: a ~100M-param LM trained through the
+hetflow task graph (host data → pull → train kernel → metric push), with
+periodic async checkpoints overlapping compute.
+
+Defaults are sized for this CPU container (a ~20M model, 50 steps, a few
+minutes); ``--full`` runs the ~100M / 300-step configuration the
+deliverable describes (same code path, more FLOPs).
+
+    PYTHONPATH=src python examples/train_lm.py [--full] [--steps N]
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import LayerGroup
+from repro.core import Executor, Heteroflow
+from repro.data import Pipeline, PipelineConfig, SyntheticSource
+from repro.training import (AdamWConfig, checkpoint, init_train_state,
+                            make_train_step, wsd_schedule)
+
+
+def small_lm(d_model: int, n_layers: int, vocab: int = 8192):
+    """A llama-style config scaled to the requested size."""
+    base = get_config("phi3-mini-3.8b")
+    return dataclasses.replace(
+        base, arch_id=f"lm-{d_model}x{n_layers}",
+        d_model=d_model, n_heads=max(4, d_model // 64),
+        n_kv_heads=max(4, d_model // 64), d_ff=d_model * 4,
+        vocab_size=vocab, head_dim=64,
+        groups=(LayerGroup(pattern=("attn",), count=n_layers,
+                           ffn="dense"),))
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true",
+                   help="~100M params / 300 steps (the deliverable config)")
+    p.add_argument("--steps", type=int, default=None)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--ckpt-dir", default="/tmp/hetflow_ckpt")
+    p.add_argument("--ckpt-every", type=int, default=25)
+    args = p.parse_args()
+
+    if args.full:
+        cfg = small_lm(768, 12)          # ≈100M params
+        steps = args.steps or 300
+    else:
+        cfg = small_lm(320, 6)           # ≈20M params: CPU-friendly demo
+        steps = args.steps or 50
+    n_params = cfg.param_count()
+    print(f"model {cfg.arch_id}: {n_params / 1e6:.1f}M params, "
+          f"{steps} steps, batch {args.batch}×{args.seq}")
+
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    opt = AdamWConfig(schedule=wsd_schedule(3e-4, 20, steps - 40, 20))
+    step_fn = jax.jit(make_train_step(cfg, opt, remat_policy="none"))
+
+    pipe = Pipeline(SyntheticSource(cfg.vocab_size),
+                    PipelineConfig(batch=args.batch, seq=args.seq))
+    buffer: dict = {}
+    losses: list[float] = []
+    box = {"state": state}
+    t0 = time.time()
+
+    # the paper's decomposition: host(read) → pull(batch) → kernel(step)
+    #                                              ↘ push(metrics)/ckpt
+    hf = Heteroflow("train")
+    host, pull_t, pull_l = pipe.host_task_graph(hf, buffer)
+
+    def do_step(tokens, labels):
+        new_state, metrics = step_fn(box["state"],
+                                     {"tokens": tokens, "labels": labels})
+        box["state"] = new_state
+        return metrics["total_loss"]
+
+    kernel = hf.kernel(do_step, pull_t, pull_l, name="train_step")
+
+    def collect():
+        losses.append(float(kernel._node.state["result"]))
+        n = len(losses)
+        if n % 10 == 0:
+            tok_s = n * args.batch * args.seq / (time.time() - t0)
+            print(f"step {n:4d}  loss {losses[-1]:.4f}  {tok_s:,.0f} tok/s",
+                  flush=True)
+
+    sink = hf.host(collect, name="metrics")
+    kernel.succeed(pull_t, pull_l).precede(sink)
+
+    with Executor(num_workers=2) as ex:
+        ckpt_futs = []
+
+        def stop():
+            n = len(losses)
+            if n and n % args.ckpt_every == 0 and len(ckpt_futs) < n // args.ckpt_every:
+                # async checkpoint via a push-style host task — overlaps
+                # the next train steps (paper §III-A.3 / DESIGN.md §4)
+                ckpt_futs.append(checkpoint.async_save(
+                    ex, args.ckpt_dir, n, box["state"]))
+            return n >= steps
+
+        ex.run_until(hf, stop).result()
+        for f in ckpt_futs:
+            f.result(timeout=600)
+
+    dt = time.time() - t0
+    print(f"done: {steps} steps in {dt:.1f}s; "
+          f"loss {losses[0]:.3f} → {losses[-1]:.3f}; "
+          f"checkpoints at {args.ckpt_dir} (latest step "
+          f"{checkpoint.latest_step(args.ckpt_dir)})")
+    assert losses[-1] < losses[0], "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

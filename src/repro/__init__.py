@@ -1,0 +1,3 @@
+"""repro — Heteroflow-JAX: heterogeneous task-graph runtime + multi-pod
+TPU training/serving framework (see DESIGN.md)."""
+__version__ = "1.0.0"

@@ -1,0 +1,445 @@
+"""Work-stealing executor for heterogeneous task graphs (paper §III-B/C).
+
+Mirrors the paper's design decisions:
+
+* **No dedicated worker per device** — all task types are uniform
+  callables, any worker may invoke any task (paper §III-C ¶1).
+* **Topology** per submitted graph marshals execution parameters, repeat
+  predicate, and a promise/future pair (paper §III-C ¶2).
+* **Device placement first** — Algorithm 1 (``core.placement``) maps each
+  kernel∪pull group onto a device bin before execution starts.
+* **Work-stealing loop** — each worker drains its local deque then turns
+  *thief*, stealing from a random victim; an **adaptive strategy keeps one
+  thief alive while any worker is active** (paper §III-C last ¶), putting
+  the rest to sleep to avoid burning host cycles.
+* **Per-device lanes + arenas** — the per-worker CUDA stream and buddy
+  memory pool of the paper map to ``core.streams`` lanes and
+  ``core.memory`` arenas (DESIGN.md §2).
+
+Functional-JAX adaptation of in-place GPU writes: a kernel task declares
+``writes=(pull_a, ...)``; its return value rebinds those pull tasks'
+device buffers, so a downstream ``push`` observes the update — the
+paper's mutate-through-pointer semantics, made explicit.
+"""
+from __future__ import annotations
+
+import itertools
+import random
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+from .graph import Heteroflow, KernelTask, Node, PullTask, TaskType, _span_view
+from .memory import DeviceArena
+from .placement import estimate_node_cost, place
+from .streams import DispatchLane, LaneRegistry, ScopedDeviceContext
+
+__all__ = ["Executor", "Topology"]
+
+
+class Topology:
+    """Runtime state for one submitted graph (paper §III-C)."""
+
+    _ids = itertools.count()
+
+    def __init__(self, graph: Heteroflow, predicate: Callable[[], bool]):
+        self.id = next(Topology._ids)
+        self.graph = graph
+        # predicate returns True when the graph should STOP repeating
+        self.predicate = predicate
+        self.future: Future = Future()
+        self.iteration = 0
+        self._remaining = 0
+        self._lock = threading.Lock()
+        self.failed: BaseException | None = None
+
+    def _arm(self) -> list[Node]:
+        """Reset join counters; return the source nodes of this iteration."""
+        sources = []
+        for n in self.graph.nodes:
+            n.join_counter = n.num_dependents
+            n.topology = self
+            if n.num_dependents == 0:
+                sources.append(n)
+        with self._lock:
+            self._remaining = len(self.graph.nodes)
+        return sources
+
+    def _node_done(self) -> bool:
+        """Returns True when the iteration completed."""
+        with self._lock:
+            self._remaining -= 1
+            return self._remaining == 0
+
+
+class _Worker:
+    __slots__ = ("id", "deque", "lock", "rng", "thread", "steals", "executed",
+                 "last_beat")
+
+    def __init__(self, wid: int):
+        self.id = wid
+        self.deque: deque[Node] = deque()
+        self.lock = threading.Lock()
+        self.rng = random.Random(0xC0FFEE ^ wid)
+        self.thread: threading.Thread | None = None
+        self.steals = 0
+        self.executed = 0
+        self.last_beat = time.monotonic()
+
+
+class Executor:
+    """``hf::Executor`` — manages N CPU workers and M device bins.
+
+    Parameters
+    ----------
+    num_workers: CPU worker threads (default: cpu count).
+    devices: device bins for Algorithm-1 placement — ``jax.Device``s,
+        shardings, or sub-mesh objects (default: ``jax.devices()``).
+    arena_bytes: if set, a buddy :class:`DeviceArena` of this capacity is
+        created per device bin (paper's per-GPU memory pool).
+    """
+
+    def __init__(
+        self,
+        num_workers: int | None = None,
+        devices: Sequence[Any] | None = None,
+        *,
+        arena_bytes: int | None = None,
+        cost_fn: Callable[[Node], float] = estimate_node_cost,
+    ):
+        if num_workers is None:
+            import os
+            num_workers = os.cpu_count() or 1
+        if num_workers < 1:
+            raise ValueError("need at least one worker")
+        self.devices = list(devices) if devices is not None else list(jax.devices())
+        if not self.devices:
+            raise ValueError("need at least one device bin")
+        self._cost_fn = cost_fn
+        self.lanes = LaneRegistry()
+        self.arenas = (
+            {id(d): DeviceArena(d, arena_bytes) for d in self.devices}
+            if arena_bytes else {}
+        )
+
+        self._workers = [_Worker(i) for i in range(num_workers)]
+        self._submit_q: deque[Node] = deque()
+        self._submit_lock = threading.Lock()
+
+        # notifier state (adaptive thief strategy)
+        self._cv = threading.Condition()
+        self._actives = 0
+        self._thieves = 0
+        self._stop = False
+
+        self._topologies: set[int] = set()
+        self._topo_cv = threading.Condition()
+
+        self._local = threading.local()
+        for w in self._workers:
+            t = threading.Thread(target=self._worker_loop, args=(w,),
+                                 name=f"hetflow-worker-{w.id}", daemon=True)
+            w.thread = t
+            t.start()
+
+    # ------------------------------------------------------------------
+    # public API (paper §III-B)
+    # ------------------------------------------------------------------
+    @property
+    def num_workers(self) -> int:
+        return len(self._workers)
+
+    def run(self, graph: Heteroflow) -> Future:
+        """Run the graph once; non-blocking, returns a future."""
+        return self.run_n(graph, 1)
+
+    def run_n(self, graph: Heteroflow, n: int) -> Future:
+        """Run the graph ``n`` times (sequentially, stateful between runs)."""
+        if n <= 0:
+            f: Future = Future()
+            f.set_result(0)
+            return f
+        counter = itertools.count(1)
+        return self.run_until(graph, lambda: next(counter) >= n)
+
+    def run_until(self, graph: Heteroflow, predicate: Callable[[], bool]) -> Future:
+        """Repeat the graph until ``predicate()`` is True (checked after
+        every full iteration).  Thread-safe; non-blocking."""
+        order = graph.topological_order()
+        if order is None:
+            raise ValueError(f"graph '{graph.name}' contains a cycle")
+        topo = Topology(graph, predicate)
+        if graph.empty():
+            topo.future.set_result(0)
+            return topo.future
+        # Algorithm 1: device placement before execution
+        initial = {d: a.bytes_in_use for d, a in
+                   ((dd, self.arenas.get(id(dd))) for dd in self.devices) if a}
+        place(graph, self.devices, self._cost_fn, initial_load=initial or None)
+        with self._topo_cv:
+            self._topologies.add(topo.id)
+        sources = topo._arm()
+        self._bulk_enqueue(sources)
+        return topo.future
+
+    def wait_for_all(self) -> None:
+        """Block until all running graphs finish (paper §III-B)."""
+        with self._topo_cv:
+            self._topo_cv.wait_for(lambda: not self._topologies)
+
+    def shutdown(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        for w in self._workers:
+            if w.thread is not None:
+                w.thread.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False
+
+    # -- introspection ---------------------------------------------------
+    def stats(self) -> dict[str, Any]:
+        return {
+            "workers": self.num_workers,
+            "devices": len(self.devices),
+            "steals": sum(w.steals for w in self._workers),
+            "executed": sum(w.executed for w in self._workers),
+            "lane_depths": {i: l.depth() for i, l in enumerate(self.lanes.lanes())},
+        }
+
+    def stragglers(self, threshold_s: float = 5.0) -> list[int]:
+        """Workers that have not heartbeat within ``threshold_s`` while the
+        executor has pending work — straggler-mitigation signal consumed by
+        the training driver (DESIGN.md §6)."""
+        now = time.monotonic()
+        with self._cv:
+            busy = self._actives > 0
+        if not busy:
+            return []
+        return [w.id for w in self._workers if now - w.last_beat > threshold_s]
+
+    # ------------------------------------------------------------------
+    # scheduling internals
+    # ------------------------------------------------------------------
+    def _bulk_enqueue(self, nodes: Sequence[Node]) -> None:
+        w = getattr(self._local, "worker", None)
+        if w is not None:
+            with w.lock:
+                w.deque.extend(nodes)
+        else:
+            with self._submit_lock:
+                self._submit_q.extend(nodes)
+        with self._cv:
+            self._cv.notify(len(nodes))
+
+    def _pop_local(self, w: _Worker) -> Node | None:
+        with w.lock:
+            return w.deque.pop() if w.deque else None
+
+    def _steal(self, w: _Worker) -> Node | None:
+        """One steal round: random victim order + the submit queue."""
+        victims = [v for v in self._workers if v is not w]
+        w.rng.shuffle(victims)
+        for v in victims:
+            with v.lock:
+                if v.deque:
+                    w.steals += 1
+                    return v.deque.popleft()
+        with self._submit_lock:
+            if self._submit_q:
+                return self._submit_q.popleft()
+        return None
+
+    def _worker_loop(self, w: _Worker) -> None:
+        self._local.worker = w
+        while True:
+            node = self._pop_local(w)
+            if node is None:
+                node = self._wait_for_task(w)
+                if node is None:
+                    return  # stop
+            with self._cv:
+                self._actives += 1
+            try:
+                self._invoke(w, node)
+            finally:
+                with self._cv:
+                    self._actives -= 1
+            w.executed += 1
+            w.last_beat = time.monotonic()
+
+    def _wait_for_task(self, w: _Worker) -> Node | None:
+        """Adaptive thief loop (paper §III-C): steal; if the queue world is
+        empty, sleep — unless we are the *last thief* and a worker is still
+        active (it may spawn successors any moment)."""
+        with self._cv:
+            self._thieves += 1
+        try:
+            spins = 0
+            while True:
+                node = self._steal(w)
+                if node is not None:
+                    return node
+                with self._cv:
+                    if self._stop:
+                        return None
+                    # last-thief rule: stay awake while someone is active
+                    if self._thieves == 1 and self._actives > 0:
+                        pass  # keep spinning
+                    else:
+                        self._cv.wait(timeout=0.01)
+                spins += 1
+                if spins % 64 == 0:
+                    time.sleep(0)  # yield GIL under long spins
+        finally:
+            with self._cv:
+                self._thieves -= 1
+
+    # ------------------------------------------------------------------
+    # task invocation — visitor pattern (paper §III-C)
+    # ------------------------------------------------------------------
+    def _invoke(self, w: _Worker, node: Node) -> None:
+        topo: Topology = node.topology
+        if topo.failed is None:
+            try:
+                handler = self._VISITOR[node.type]
+                handler(self, w, node)
+            except BaseException as e:  # noqa: BLE001 — propagate via future
+                topo.failed = e
+        self._finish_node(node)
+
+    def _invoke_host(self, w: _Worker, node: Node) -> None:
+        if node.work is not None:
+            node.state["result"] = node.work()
+
+    def _invoke_pull(self, w: _Worker, node: Node) -> None:
+        """H2D: materialize host span, transfer onto the assigned bin."""
+        host = _span_view(node.state["source"], node.state.get("size"))
+        sharding = node.state.get("sharding")
+        target = sharding if sharding is not None else node.device
+        lane = self.lanes.lane(node.device)
+        arena = self.arenas.get(id(node.device))
+        with ScopedDeviceContext(node.device):
+            if target is not None and not isinstance(target, jax.Device):
+                buf = jax.device_put(host, target)
+            elif isinstance(target, jax.Device):
+                buf = jax.device_put(host, target)
+            else:
+                buf = jax.device_put(host)
+        if arena is not None and "arena_off" not in node.state:
+            node.state["arena_off"] = arena.allocate(max(host.nbytes, 1))
+        node.state["device_data"] = buf
+        lane.record(buf)
+
+    def _invoke_push(self, w: _Worker, node: Node) -> None:
+        """D2H: copy the *source pull task's* device buffer to the host
+        target (paper Listing 6)."""
+        src: Node = node.state["src"]
+        buf = src.state.get("device_data")
+        if buf is None:
+            raise RuntimeError(
+                f"push '{node.name}': source pull '{src.name}' has no device data"
+            )
+        host = np.asarray(jax.device_get(buf))
+        target = node.state["target"]
+        size = node.state.get("size")
+        if callable(target):
+            target(host)
+        else:
+            out = np.asarray(target)
+            flat = host.reshape(-1)[: size if size is not None else None]
+            out.reshape(-1)[: flat.size] = flat
+        node.state["result"] = host
+
+    def _invoke_kernel(self, w: _Worker, node: Node) -> None:
+        """Device compute: substitute pull/kernel handles in the argument
+        list with their device arrays (paper Listing 8/9), run under the
+        bin's device scope, rebind declared writes."""
+        fn = node.state["fn"]
+        args = [self._convert(a) for a in node.state["args"]]
+        lane = self.lanes.lane(node.device)
+        with ScopedDeviceContext(node.device):
+            result = fn(*args)
+        node.state["result"] = result
+        writes = node.state.get("writes", ())
+        if writes:
+            outs = result if isinstance(result, (tuple, list)) else (result,)
+            if len(outs) < len(writes):
+                raise ValueError(
+                    f"kernel '{node.name}' declared {len(writes)} writes but "
+                    f"returned {len(outs)} outputs")
+            for pt, out in zip(writes, outs):
+                pt._node.state["device_data"] = out
+        lane.record(result)
+
+    def _convert(self, arg: Any) -> Any:
+        """Paper's ``convert``/PointerCaster: task handle → device datum."""
+        if isinstance(arg, PullTask):
+            return arg.device_data()
+        if isinstance(arg, KernelTask):
+            res = arg._node.state.get("result")
+            if res is None:
+                raise RuntimeError(
+                    f"kernel '{arg._node.name}' used as argument before it ran")
+            return res
+        return arg
+
+    _VISITOR = {
+        TaskType.HOST: _invoke_host,
+        TaskType.PLACEHOLDER: _invoke_host,
+        TaskType.PULL: _invoke_pull,
+        TaskType.PUSH: _invoke_push,
+        TaskType.KERNEL: _invoke_kernel,
+    }
+
+    # ------------------------------------------------------------------
+    # completion / repeat logic
+    # ------------------------------------------------------------------
+    def _finish_node(self, node: Node) -> None:
+        topo: Topology = node.topology
+        # successors are enqueued even after a failure: _invoke skips
+        # their handlers (topo.failed guard) but they must still drain the
+        # remaining-counter or the topology future never resolves
+        ready = []
+        for s in node.successors:
+            with topo._lock:
+                s.join_counter -= 1
+                if s.join_counter == 0:
+                    ready.append(s)
+        if ready:
+            self._bulk_enqueue(ready)
+        if topo._node_done():
+            self._finish_iteration(topo)
+
+    def _finish_iteration(self, topo: Topology) -> None:
+        topo.iteration += 1
+        if topo.failed is None:
+            try:
+                stop = topo.predicate()
+            except BaseException as e:  # noqa: BLE001
+                topo.failed = e
+                stop = True
+        else:
+            stop = True
+        if not stop:
+            sources = topo._arm()
+            self._bulk_enqueue(sources)
+            return
+        # retire topology
+        with self._topo_cv:
+            self._topologies.discard(topo.id)
+            self._topo_cv.notify_all()
+        if topo.failed is not None:
+            topo.future.set_exception(topo.failed)
+        else:
+            topo.future.set_result(topo.iteration)

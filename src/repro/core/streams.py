@@ -1,0 +1,131 @@
+"""Per-device dispatch lanes and RAII device scopes (paper §III-C).
+
+The paper keeps a *per-worker CUDA stream* so memory ops and kernels from
+different workers interleave on the GPU.  JAX has no user stream API: the
+runtime already queues work per device asynchronously in issue order.  We
+keep an explicit :class:`DispatchLane` per device so that
+
+* the executor can account for in-flight work per device (the paper's
+  stream occupancy → our lane depth, used as a straggler signal), and
+* ordering between a kernel and the pushes that read its output is
+  explicit (the paper's ``cudaStreamWaitEvent`` → our lane tokens).
+
+``ScopedDeviceContext`` mirrors the paper's RAII ``cudaSetDevice`` scope
+with ``jax.default_device`` — relevant for host-staged computations that
+don't carry an explicit sharding.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from collections import deque
+from typing import Any
+
+import jax
+
+__all__ = ["DispatchLane", "ScopedDeviceContext", "LaneRegistry"]
+
+
+class DispatchLane:
+    """FIFO accounting of asynchronously dispatched device work."""
+
+    def __init__(self, device: Any):
+        self.device = device
+        self._lock = threading.Lock()
+        self._inflight: deque = deque()
+        self.dispatched = 0
+        self.retired = 0
+
+    def record(self, token: Any) -> None:
+        """Record a dispatched async value (a jax.Array or pytree)."""
+        with self._lock:
+            self._inflight.append(token)
+            self.dispatched += 1
+
+    def depth(self) -> int:
+        with self._lock:
+            return len(self._inflight)
+
+    def drain(self) -> None:
+        """Block until everything recorded on this lane has materialized
+        (the lane's ``cudaStreamSynchronize``)."""
+        while True:
+            with self._lock:
+                if not self._inflight:
+                    return
+                token = self._inflight.popleft()
+            jax.block_until_ready(token)
+            with self._lock:
+                self.retired += 1
+
+    def retire_ready(self) -> int:
+        """Opportunistically pop tokens that have already materialized."""
+        n = 0
+        while True:
+            with self._lock:
+                if not self._inflight:
+                    return n
+                token = self._inflight[0]
+            if _is_ready(token):
+                with self._lock:
+                    if self._inflight and self._inflight[0] is token:
+                        self._inflight.popleft()
+                        self.retired += 1
+                        n += 1
+            else:
+                return n
+
+
+def _is_ready(token: Any) -> bool:
+    leaves = jax.tree_util.tree_leaves(token)
+    for leaf in leaves:
+        ready = getattr(leaf, "is_ready", None)
+        if ready is not None and not ready():
+            return False
+    return True
+
+
+class ScopedDeviceContext(contextlib.AbstractContextManager):
+    """RAII-style device scope (paper Listing 13 line 3)."""
+
+    def __init__(self, device: Any):
+        self.device = device
+        self._ctx = None
+
+    def __enter__(self):
+        # Sub-mesh bins are sharding-driven; only raw Devices can be a
+        # jax.default_device target.
+        if isinstance(self.device, jax.Device):
+            self._ctx = jax.default_device(self.device)
+            self._ctx.__enter__()
+        return self
+
+    def __exit__(self, *exc):
+        if self._ctx is not None:
+            self._ctx.__exit__(*exc)
+        return False
+
+
+class LaneRegistry:
+    """One lane per device bin, created on demand; thread-safe."""
+
+    def __init__(self):
+        self._lanes: dict[int, DispatchLane] = {}
+        self._lock = threading.Lock()
+
+    def lane(self, device: Any) -> DispatchLane:
+        key = id(device)
+        with self._lock:
+            lane = self._lanes.get(key)
+            if lane is None:
+                lane = self._lanes[key] = DispatchLane(device)
+            return lane
+
+    def lanes(self) -> list[DispatchLane]:
+        with self._lock:
+            return list(self._lanes.values())
+
+    def drain_all(self) -> None:
+        for lane in self.lanes():
+            lane.drain()

@@ -1,0 +1,233 @@
+"""Activation-sharding context.
+
+Model code calls :func:`constrain` at key boundaries (residual stream,
+MoE dispatch buffers).  Outside a distributed launch the calls are
+no-ops, so smoke tests on one device run the identical code path.  The
+launchers (dryrun / train / serve) enter :func:`use_sharding_rules` to
+activate the constraints for the current mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _active() -> dict | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_sharding_rules(*, batch_axes=("pod", "data"), model_axis="model",
+                       mesh=None, seq_shard: bool = True,
+                       decode_tp: bool = False):
+    """Enable with_sharding_constraint inside model code.
+
+    ``seq_shard``: shard the sequence dim of the residual stream over the
+    model axis between blocks (Megatron-SP) — bounds the scanned boundary
+    activations; projections then all-gather seq and emit head-/ffn-
+    sharded tensors (the SP↔TP transition), enforced by the ``heads`` /
+    ``ffn_hidden`` constraints below.
+    """
+    names = set(mesh.axis_names) if mesh is not None else None
+    sizes = (dict(zip(mesh.axis_names, mesh.devices.shape))
+             if mesh is not None else {})
+    baxes = tuple(a for a in batch_axes if names is None or a in names)
+    prev = _active()
+    _state.rules = {
+        "batch": baxes if len(baxes) != 1 else baxes[0],
+        "model": model_axis if (names is None or model_axis in names) else None,
+        "seq_shard": seq_shard,
+        "sizes": sizes,
+        "mesh": mesh,
+        "decode_tp": decode_tp,
+    }
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+@contextlib.contextmanager
+def manual_mode():
+    """Suspend activation constraints while tracing a shard_map body
+    (Manual axes reject with_sharding_constraint)."""
+    prev = getattr(_state, "manual", False)
+    _state.manual = True
+    try:
+        yield
+    finally:
+        _state.manual = prev
+
+
+def _fits(rules, dim_size: int, entry) -> bool:
+    """Divisibility guard for activation constraints."""
+    if entry is None:
+        return True
+    sizes = rules.get("sizes", {})
+    names = entry if isinstance(entry, tuple) else (entry,)
+    total = 1
+    for n in names:
+        total *= sizes.get(n, 1)
+    return total > 0 and dim_size % total == 0 and dim_size >= total
+
+
+def _all_axes(rules) -> tuple:
+    b = rules["batch"]
+    names = list(b) if isinstance(b, tuple) else [b] if b else []
+    if rules["model"]:
+        names.append(rules["model"])
+    return tuple(names)
+
+
+def moe_shard_info(n_tokens: int):
+    """(mesh, batch_axes, model_axis) for the shard_map MoE path, or None
+    when not applicable (no mesh context / token count not divisible by
+    the device count)."""
+    rules = _active()
+    if rules is None or rules.get("mesh") is None or rules["model"] is None:
+        return None
+    sizes = rules.get("sizes", {})
+    total = 1
+    for n in _all_axes(rules):
+        total *= sizes.get(n, 1)
+    if total <= 1 or n_tokens % total != 0:
+        return None
+    b = rules["batch"]
+    baxes = tuple(b) if isinstance(b, tuple) else ((b,) if b else ())
+    return rules["mesh"], baxes, rules["model"]
+
+
+def decode_shard_info(batch: int, s_cache: int):
+    """(mesh, batch_axes, model_axis) for shard_map flash-decode over a
+    sequence-sharded KV cache, or None when not applicable.
+
+    ``REPRO_NO_FLASH_DECODE=1`` disables the path (baseline A/B for the
+    §Perf log)."""
+    import os
+    if os.environ.get("REPRO_NO_FLASH_DECODE"):
+        return None
+    rules = _active()
+    if rules is None or getattr(_state, "manual", False) \
+            or rules.get("mesh") is None or rules["model"] is None:
+        return None
+    sizes = rules.get("sizes", {})
+    M = sizes.get(rules["model"], 1)
+    if M <= 1 or s_cache % M != 0:
+        return None
+    b = rules["batch"]
+    baxes = tuple(b) if isinstance(b, tuple) else ((b,) if b else ())
+    btotal = 1
+    for n in baxes:
+        btotal *= sizes.get(n, 1)
+    if baxes and batch % btotal != 0:
+        baxes = ()
+    return rules["mesh"], baxes, rules["model"]
+
+
+def dispatch_groups(n_tokens: int) -> int:
+    """MoE dispatch group count: one group per DEVICE when it divides the
+    token count — sort/gather/scatter then never cross a shard; the only
+    cross-device movement is the (G@devices → G@data, E@model) layout
+    transition, which XLA lowers as all-to-all.  Outside a distributed
+    launch: 1."""
+    rules = _active()
+    if rules is None:
+        return 1
+    sizes = rules.get("sizes", {})
+    total = 1
+    for n in _all_axes(rules):
+        total *= sizes.get(n, 1)
+    return total if total and n_tokens % total == 0 else 1
+
+
+def decode_tp_active() -> bool:
+    """§Perf M2: weight-stationary 2D-TP decode — activations cycle
+    between feature-sharded layouts so 2D-sharded weights never move
+    (KB-scale activation psums replace GB-scale per-layer weight
+    all-gathers)."""
+    rules = _active()
+    return bool(rules and rules.get("decode_tp")
+                and not getattr(_state, "manual", False))
+
+
+def constrain(x, kind: str):
+    """Apply a named constraint if a rule context is active.
+
+    kinds: ``residual`` (B,S,d) · ``heads`` (B,S,H,hd) · ``ffn_hidden``
+    (B,S,f) · ``moe_buffers`` (E,C,d) · ``logits`` (B,S,V) ·
+    ``dtp_features`` (B,S,d: d→data, B replicated) · ``dtp_hidden``
+    (B,S,f: f→model, B replicated) · ``batch_only`` (B,…: B→batch)."""
+    rules = _active()
+    if rules is None or getattr(_state, "manual", False):
+        return x
+    b, m = rules["batch"], rules["model"]
+    if kind != "moe_buffers" and b is not None \
+            and not _fits(rules, x.shape[0], b):
+        b = None
+    if kind == "residual":
+        seq = m if (rules["seq_shard"] and x.ndim >= 2
+                    and _fits(rules, x.shape[1], m)) else None
+        return jax.lax.with_sharding_constraint(x, P(b, seq, None))
+    if kind == "heads":
+        if not _fits(rules, x.shape[2], m):
+            return jax.lax.with_sharding_constraint(
+                x, P(b, *([None] * (x.ndim - 1))))
+        return jax.lax.with_sharding_constraint(x, P(b, None, m, None))
+    if kind == "ffn_hidden":
+        if not _fits(rules, x.shape[-1], m):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, P(b, *([None] * (x.ndim - 2)), m))
+    if kind == "moe_buffers":
+        e_ok = _fits(rules, x.shape[0], m)
+        d_ok = _fits(rules, x.shape[2], b)
+        return jax.lax.with_sharding_constraint(
+            x, P(m if e_ok else None, None, b if d_ok else None))
+    if kind == "moe_groups":  # (G, E, C, d): groups→batch, experts→model
+        g_ok = _fits(rules, x.shape[0], b)
+        e_ok = _fits(rules, x.shape[1], m)
+        return jax.lax.with_sharding_constraint(
+            x, P(b if g_ok else None, m if e_ok else None, None, None))
+    if kind == "group_tokens":  # (G, …): groups→ALL mesh axes, rest local
+        axes = _all_axes(rules)
+        g_ok = axes and _fits(rules, x.shape[0], axes)
+        return jax.lax.with_sharding_constraint(
+            x, P(axes if g_ok else None, *([None] * (x.ndim - 1))))
+    if kind == "logits":
+        if not _fits(rules, x.shape[-1], m):
+            return x
+        return jax.lax.with_sharding_constraint(x, P(b, None, m))
+    if kind == "dtp_features":   # weight-stationary: d → data axis
+        d_axis = "data" if rules.get("sizes", {}).get("data") else None
+        if d_axis is None or not _fits(rules, x.shape[-1], d_axis):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, P(*([None] * (x.ndim - 1)), d_axis))
+    if kind == "dtp_hidden":     # weight-stationary: f → model axis
+        if not _fits(rules, x.shape[-1], m):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, P(*([None] * (x.ndim - 1)), m))
+    if kind == "batch_only":
+        return jax.lax.with_sharding_constraint(
+            x, P(b, *([None] * (x.ndim - 1))))
+    if kind == "replicated":
+        return jax.lax.with_sharding_constraint(x, P(*([None] * x.ndim)))
+    if kind == "scan_xs_batch":   # (n, B, …): batch on dim 1, rest local
+        if x.ndim < 2 or not _fits(rules, x.shape[1], b):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, P(None, b, *([None] * (x.ndim - 2))))
+    if kind == "flash_blocks":    # (B, n, blk, K, G, D): B→batch, K→model
+        spec = [None] * x.ndim
+        if _fits(rules, x.shape[0], b):
+            spec[0] = b
+        if x.ndim >= 4 and _fits(rules, x.shape[3], m):
+            spec[3] = m
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    return x

@@ -1,0 +1,77 @@
+"""GPipe-style pipeline parallelism expressed as a hetflow task graph.
+
+The paper's taxonomy gives pipeline parallelism for free (DESIGN.md §4.4):
+each (stage, microbatch) cell is a *kernel* task, inter-stage activation
+transfers are the pull/push edges, and the executor's work-stealing
+schedule naturally produces the 1F1B-ish interleaving — no bespoke
+pipeline scheduler.  Algorithm-1 placement pins each stage's cells to its
+device bin (stage weights are the pull tasks that anchor the union-find
+groups).
+
+This runs TODAY on CPU bins (tests/benchmarks) and on TPU sub-meshes by
+passing shardings as bins; the dry-run meshes use DP×TP instead (DESIGN.md
+§6), so this module is the scale-out option for >2 pods where inter-pod
+ICI is the bottleneck and stage-local traffic wins.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from ..core import Heteroflow, PullTask
+
+
+@dataclass
+class Stage:
+    """One pipeline stage: a callable  (params, x) -> y  plus its params."""
+    fn: Callable[[Any, Any], Any]
+    params: Any
+
+
+def build_pipeline_graph(stages: Sequence[Stage], microbatches: Sequence[Any],
+                         collect: list | None = None) -> Heteroflow:
+    """Build the (n_stages × n_microbatches) task grid.
+
+    Dependencies: cell (s, m) needs (s−1, m) [dataflow] and (s, m−1)
+    [stage occupancy — one in-flight microbatch per stage, GPipe rule].
+    ``collect`` (optional list) receives the last stage's outputs in
+    microbatch order.
+    """
+    G = Heteroflow("pipeline")
+    n_stages = len(stages)
+
+    # stage weights enter as pull tasks: Algorithm 1 then unions every
+    # kernel of a stage with its weight pull → whole stage lands on one bin
+    weight_pulls: list[PullTask] = []
+    for s, stage in enumerate(stages):
+        weight_pulls.append(G.pull(stage.params, name=f"weights[{s}]"))
+
+    grid: list[list] = [[None] * len(microbatches) for _ in range(n_stages)]
+    for m, mb in enumerate(microbatches):
+        prev_out = G.pull(mb, name=f"mb[{m}]")
+        for s, stage in enumerate(stages):
+            k = G.kernel(stage.fn, weight_pulls[s], prev_out,
+                         cost=1.0, name=f"f[{s},{m}]")
+            k.succeed(weight_pulls[s])
+            if isinstance(prev_out, PullTask):
+                k.succeed(prev_out)
+            else:
+                prev_out.precede(k)          # dataflow (s−1, m) → (s, m)
+            if m > 0:
+                grid[s][m - 1].precede(k)    # occupancy (s, m−1) → (s, m)
+            grid[s][m] = k
+            prev_out = k
+        if collect is not None:
+            sink = G.host(
+                lambda k=grid[n_stages - 1][m]: collect.append(
+                    np.asarray(k._node.state["result"])),
+                name=f"collect[{m}]")
+            grid[n_stages - 1][m].precede(sink)
+    return G
+
+
+def pipeline_schedule_length(n_stages: int, n_microbatches: int) -> int:
+    """Ideal GPipe makespan in cell-steps: (S − 1) fill + M steady."""
+    return n_stages - 1 + n_microbatches

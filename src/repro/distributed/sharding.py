@@ -1,0 +1,216 @@
+"""Sharding rules: param/batch/cache PartitionSpecs per (config × mesh).
+
+Layout (DESIGN.md §6), MaxText-style fsdp+tensor:
+
+* batch dims            → ``("pod", "data")`` (pure DP across pods —
+                          lowest pressure on the slow inter-pod links)
+* attention heads, d_ff, experts, vocab → ``"model"`` (TP / EP)
+* the *other* big dim of each weight    → ``"data"``  (FSDP / ZeRO-3)
+* KV heads with n_kv < |model|          → replicated (Megatron practice)
+
+Every rule passes a divisibility guard: an axis that does not divide the
+dim is dropped (replicated) rather than relying on XLA padding for
+weights.  Optimizer state inherits the param spec; scalars replicate.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+BATCH_AXES = ("pod", "data")   # present axes are used; missing are skipped
+
+
+def _axes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+
+
+def _guard(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes that don't divide their dim."""
+    sizes = _axes(mesh)
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        total = int(np.prod([sizes[n] for n in names]))
+        if i < len(shape) and shape[i] % total == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+def _param_rule(cfg: ModelConfig, path: tuple[str, ...],
+                shape: tuple[int, ...], mesh: Mesh) -> P:
+    name = path[-1]
+    in_groups = path and path[0] == "groups"
+    ndim = len(shape)
+    lead = ndim - (3 if _is_expert(path) else 2)  # scan/stack dims
+
+    def with_lead(*spec_tail):
+        return P(*([None] * max(lead, 0)), *spec_tail)
+
+    kv_shardable = (cfg.n_kv_heads * cfg.head_dim_) % _axes(mesh).get(
+        "model", 1) == 0 and cfg.n_kv_heads >= _axes(mesh).get("model", 1)
+
+    if name == "embed":
+        return P("model", "data")
+    if name == "lm_head":
+        return P("data", "model")
+    if _is_expert(path):
+        # experts (E, d, f) / (E, f, d): EP over model, FSDP over the
+        # d_model dim
+        if name in ("w_gate", "w_up"):
+            return with_lead("model", "data", None)
+        if name == "w_down":
+            return with_lead("model", None, "data")
+    if name == "router":
+        return with_lead("data", None)
+    if name in ("w_gate", "w_up"):            # dense SwiGLU
+        return with_lead("data", "model")
+    if name == "w_down":
+        return with_lead("model", "data")
+    if name == "wq":
+        return with_lead("data", "model")
+    if name in ("wk", "wv"):
+        return with_lead("data", "model" if kv_shardable else None)
+    if name == "wo":
+        return with_lead("model", "data")
+    # MLA
+    if name in ("w_dkv", "w_krope", "w_dq"):
+        return with_lead("data", None)
+    if name in ("w_uk", "w_uv", "w_uq"):
+        return with_lead(None, "model")
+    # recurrent / xlstm
+    if name in ("w_x",):
+        return with_lead("data", "model")
+    if name == "w_out":
+        return with_lead("model", "data")
+    if name == "w_in":
+        return with_lead("data", "model")
+    if name == "w_up" and in_groups:
+        return with_lead("data", "model")
+    # generic fallback: FSDP the largest dim
+    if ndim >= 2:
+        body = [None] * ndim
+        big = int(np.argmax(shape[max(lead, 0):])) + max(lead, 0)
+        body[big] = "data"
+        return _guard(P(*body), shape, mesh)
+    return P(*([None] * ndim))
+
+
+def _is_expert(path: tuple[str, ...]) -> bool:
+    return "experts" in path
+
+
+def _path_names(path) -> tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+        else:
+            names.append(str(p))
+    return tuple(names)
+
+
+def param_pspecs(cfg: ModelConfig, params_like: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching ``params_like`` (arrays or
+    ShapeDtypeStructs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_like)
+    specs = []
+    for path, leaf in flat:
+        names = _path_names(path)
+        spec = _param_rule(cfg, names, tuple(leaf.shape), mesh)
+        specs.append(_guard(spec, tuple(leaf.shape), mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def state_pspecs(cfg: ModelConfig, state_like: Any, mesh: Mesh) -> Any:
+    """Train-state specs: params + opt {m, v} share the param layout
+    (ZeRO: optimizer state sharded exactly like its param); step scalar
+    replicates."""
+    pspec = param_pspecs(cfg, state_like["params"], mesh)
+    return {
+        "params": pspec,
+        "opt": {
+            "m": param_pspecs(cfg, state_like["opt"]["m"], mesh),
+            "v": param_pspecs(cfg, state_like["opt"]["v"], mesh),
+            "step": P(),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 batch_like: Any) -> Any:
+    """Shard batch dims over (pod, data) when divisible; replicate
+    otherwise (long_500k's global_batch=1)."""
+    baxes = _batch_axes(mesh)
+
+    def rule(path, leaf):
+        spec = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1:
+            spec[0] = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+        return _guard(P(*spec), tuple(leaf.shape), mesh)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_like)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, l) for p, l in flat])
+
+
+def cache_pspecs(cfg: ModelConfig, cache_like: Any, mesh: Mesh) -> Any:
+    """Decode-cache specs.  Dim 0 is the scan stack; dim 1 the request
+    batch (→ pod/data when divisible).  When batch replicates
+    (long_500k), shard the largest remaining divisible dim over
+    ``model`` — e.g. mLSTM's (…, dh, dh) matrix memory."""
+    baxes = _batch_axes(mesh)
+    sizes = _axes(mesh)
+    model = sizes.get("model", 1)
+
+    def rule(path, leaf):
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        if nd <= 1:
+            return P(*([None] * nd))
+        spec = [None] * nd
+        bdim = 1 if nd >= 2 else 0
+        btotal = int(np.prod([sizes[a] for a in baxes])) if baxes else 1
+        if baxes and shape[bdim] % btotal == 0:
+            spec[bdim] = baxes if len(baxes) > 1 else baxes[0]
+        # shard one more big dim over model for memory (KV heads·hd or dh)
+        rest = [(i, s) for i, s in enumerate(shape)
+                if i > bdim and spec[i] is None]
+        rest.sort(key=lambda t: -t[1])
+        for i, s in rest:
+            if s % model == 0 and s >= model:
+                spec[i] = "model"
+                break
+        return _guard(P(*spec), shape, mesh)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_like)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, l) for p, l in flat])
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,108 @@
+"""Pallas TPU decode attention: one query token vs a long KV cache.
+
+The decode bottleneck is HBM bandwidth — the cache is read once per step
+and arithmetic intensity is O(1).  Grid: (batch, n_kv_blocks); the
+kv-block axis is innermost/sequential, with the (H, Dv) accumulator and
+(H,) stats in VMEM scratch, so the kernel streams the cache through VMEM
+in (kb, K, D) tiles exactly once — the roofline-optimal access pattern.
+``valid_len`` (per batch row, SMEM) masks the tail; ring-buffer caches
+(local attention) pass valid_len=W and rely on entry-order-agnostic
+masking (post-RoPE keys, DESIGN.md).
+
+VMEM per program ≈ kb·K·(D+Dv)·2B + H·Dv·4B; kb=512, K=8, D=128: 2.1 MiB.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *,
+                   scale: float, kv_block: int, groups: int):
+    j = pl.program_id(1)
+    n_k = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                   # (H, D)
+    k = k_ref[0].astype(jnp.float32)                   # (kb, K, D)
+    v = v_ref[0].astype(jnp.float32)                   # (kb, K, Dv)
+    H, D = q.shape
+    kb, K, _ = k.shape
+    qh = q.reshape(K, groups, D)
+
+    s = jax.lax.dot_general(
+        qh, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * scale    # (K, G, kb)
+
+    valid = j * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (K, groups, kb), 2) < len_ref[0]
+    s = s + jnp.float32(NEG) * (~valid)
+
+    m_prev = m_ref[...]                                # (H,)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1).reshape(H))
+    p = jnp.exp(s - m_new.reshape(K, groups)[..., None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1).reshape(H)
+    pv = jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)            # (K, G, Dv)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv.reshape(H, -1)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k, v, valid_len, *, scale: float | None = None,
+                         kv_block: int = 512, interpret: bool = False):
+    """q: (B, H, D); k, v: (B, S, K, D); valid_len: (B,) int32.
+
+    Returns (B, H, Dv)."""
+    B, H, D = q.shape
+    _, S, K, Dv = v.shape
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    kb = min(kv_block, max(S, 8))
+    pad = (-S) % kb
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_k = k.shape[1] // kb
+
+    kernel = functools.partial(_decode_kernel, scale=scale, kv_block=kb,
+                               groups=G)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_k),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, j: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, H, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, kb, K, D), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, kb, K, Dv), lambda b, j: (b, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, Dv), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H, Dv), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(valid_len.astype(jnp.int32), q, k, v)

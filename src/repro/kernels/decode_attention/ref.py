@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, valid_len, *, scale: float | None = None):
+    """q: (B, H, D); k, v: (B, S, K, D); valid_len: (B,)."""
+    B, H, D = q.shape
+    _, S, K, Dv = v.shape
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qh = q.reshape(B, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, k.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, :] < valid_len[:, None]        # (B, S)
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Dv).astype(q.dtype)

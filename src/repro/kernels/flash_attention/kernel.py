@@ -1,0 +1,125 @@
+"""Pallas TPU flash attention (forward) — VMEM-tiled online softmax.
+
+Grid: (batch, q_heads, n_q_blocks, n_kv_blocks); the kv-block axis is the
+innermost (sequential on TPU), so the f32 accumulator / running max /
+denominator live in VMEM scratch across kv iterations and the S×S score
+matrix never touches HBM — the memory behaviour the pure-JAX fallback
+(models/layers.py) can only approximate blockwise.
+
+Block shapes are MXU-aligned: q/out tiles (qb, D), k/v tiles (kb, D) with
+qb·kb ≥ 128·128 and D a multiple of 128 preferred (hardware lane width).
+VMEM budget per program ≈ (qb + 2·kb)·D·2B + qb·D·4B + scores qb·kb·4B —
+with qb=kb=512, D=128: ~1.9 MiB, well inside the ~16 MiB/core budget.
+GQA: kv-head index = q_head // (H // K), encoded in the index_map.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  causal: bool, window: int | None, scale: float,
+                  kv_len: int, q_block: int, kv_block: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    n_k = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (qb, D)
+    k = k_ref[0, 0].astype(jnp.float32)               # (kb, D)
+    v = v_ref[0, 0].astype(jnp.float32)               # (kb, Dv)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (qb, kb)
+
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 0)
+    k_pos = kj * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 1)
+    bias = jnp.float32(NEG) * (k_pos >= kv_len)
+    if causal:
+        bias += jnp.float32(NEG) * (q_pos < k_pos)
+    if window is not None:
+        bias += jnp.float32(NEG) * (q_pos - k_pos >= window)
+    s = s + bias
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == n_k - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        window: int | None = None,
+                        scale: float | None = None,
+                        q_block: int = 512, kv_block: int = 512,
+                        interpret: bool = False):
+    """q: (B, H, Sq, D); k, v: (B, K, Sk, D) with H % K == 0.
+
+    Returns (B, H, Sq, D) in q.dtype.  Sq/Sk are padded to block size
+    internally; masking handles the tail.
+    """
+    B, H, Sq, D = q.shape
+    _, K, Sk, Dv = v.shape
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qb = min(q_block, max(Sq, 8))
+    kb = min(kv_block, max(Sk, 8))
+    pad_q = (-Sq) % qb
+    pad_k = (-Sk) % kb
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    n_q = q.shape[2] // qb
+    n_k = k.shape[2] // kb
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, scale=scale,
+        kv_len=Sk, q_block=qb, kv_block=kb)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, qb, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, kb, D),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, kb, Dv),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, Dv), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, n_q * qb, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, Dv), jnp.float32),   # acc
+            pltpu.VMEM((qb,), jnp.float32),      # running max
+            pltpu.VMEM((qb,), jnp.float32),      # denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

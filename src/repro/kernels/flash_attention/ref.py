@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int | None = None, scale: float | None = None):
+    """Dense reference.  q: (B, H, Sq, D); k, v: (B, K, Sk, D)."""
+    B, H, Sq, D = q.shape
+    _, K, Sk, Dv = v.shape
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qh = q.reshape(B, K, G, Sq, D).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qh, k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, Dv).astype(q.dtype)

@@ -1,0 +1,17 @@
+"""Jitted public wrapper for the fused MoE gating Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import moe_gating_fwd
+
+
+@partial(jax.jit, static_argnames=("top_k", "capacity", "token_block",
+                                   "interpret"))
+def moe_gating(logits, *, top_k: int, capacity: int, token_block: int = 256,
+               interpret: bool = True):
+    """Fused router: softmax → top-k → FCFS capacity slots.  (T, E) in."""
+    return moe_gating_fwd(logits, top_k=top_k, capacity=capacity,
+                          token_block=token_block, interpret=interpret)

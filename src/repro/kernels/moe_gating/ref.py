@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused MoE gating kernel.
+
+First-come-first-served capacity assignment in token order — the same
+semantics the kernel's streaming histogram produces and the argsort-based
+dispatch in models/moe.py implements (stable sort keeps token order
+within an expert segment).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gating_ref(logits, *, top_k: int, capacity: int):
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, eids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = eids.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    rank = (jnp.cumsum(onehot, axis=0) - 1)[jnp.arange(flat_e.shape[0]),
+                                            flat_e]
+    keep = rank < capacity
+    slot = flat_e * capacity + jnp.where(keep, rank, 0)
+    return (eids.astype(jnp.int32), gates,
+            slot.reshape(T, top_k).astype(jnp.int32),
+            keep.reshape(T, top_k))

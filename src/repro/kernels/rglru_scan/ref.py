@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel (associative-scan form)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(x, a, h0):
+    """h_t = a_t·h_{t−1} + x_t with h_0 seeded by ``h0``; (B, S, dr)."""
+    x = x.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    x = jnp.concatenate([h0.astype(jnp.float32)[:, None], x], axis=1)
+    a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, a2 * x1 + x2
+
+    _, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h[:, 1:]

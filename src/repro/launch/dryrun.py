@@ -1,0 +1,313 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any jax import (device count locks at
+first init).  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-mini-3.8b \
+        --shape train_4k [--multi-pod] [--out results/]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/
+
+Per cell this produces: compiled.memory_analysis() (fits-per-device
+proof), cost_analysis() FLOPs/bytes, the collective schedule parsed from
+HLO, and the three roofline terms (launch/roofline.py) — persisted as
+JSON for EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import LONG_CONTEXT_ARCHS, SHAPES, get_config, list_archs
+from ..configs.base import ModelConfig, ShapeConfig
+from ..distributed import (
+    batch_pspecs, cache_pspecs, named, param_pspecs, state_pspecs,
+    use_sharding_rules,
+)
+from ..models import transformer
+from ..training import AdamWConfig, cosine_schedule, trainer
+from . import hlo_cost
+from .mesh import make_production_mesh
+from .roofline import Roofline, model_flops
+
+# per-arch training numerics at 256 chips × 16 GB (DESIGN.md §6): the
+# largest models keep bf16 params (and bf16 moments for llama4) to fit
+# p+m+v; this is recorded per cell in the JSON.
+TRAIN_OVERRIDES: dict[str, dict] = {
+    "deepseek-v2-236b": {"param_dtype": "bfloat16", "accum": 8},
+    "llama4-maverick-400b-a17b": {"param_dtype": "bfloat16",
+                                  "opt_dtype": "bfloat16", "accum": 8},
+    "mistral-large-123b": {"accum": 4},
+    "xlstm-1.3b": {"accum": 4},          # §Perf X5: matrix-memory states
+    "minicpm-2b": {"accum": 2},          # 16.2 → 14.0 GiB: fits
+    "recurrentgemma-2b": {"accum": 2},   # 22.6 → 19.2 GiB
+}
+SERVE_DTYPE = jnp.bfloat16   # inference weights are bf16 (standard)
+
+
+def _apply_overrides(cfg: ModelConfig, kind: str) -> tuple[ModelConfig, dict]:
+    ov = dict(TRAIN_OVERRIDES.get(cfg.arch_id, {})) if kind == "train" else {}
+    if "param_dtype" in ov:
+        cfg = dataclasses.replace(cfg, param_dtype=ov["param_dtype"])
+    return cfg, ov
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model inputs for one cell, as ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        n_vis = cfg.n_visual_tokens if cfg.frontend == "vision_stub" else 0
+        toks = S - n_vis
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, toks), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, toks), jnp.int32),
+        }
+        if n_vis:
+            batch["extra_embeds"] = jax.ShapeDtypeStruct(
+                (B, n_vis, cfg.d_model), jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        n_vis = cfg.n_visual_tokens if cfg.frontend == "vision_stub" else 0
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S - n_vis), jnp.int32)}
+        if n_vis:
+            batch["extra_embeds"] = jax.ShapeDtypeStruct(
+                (B, n_vis, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against a cache of S tokens
+    return {"token": jax.ShapeDtypeStruct((B,), jnp.int32)}
+
+
+def _serve_param_specs(cfg: ModelConfig):
+    specs = transformer.param_specs(cfg)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, SERVE_DTYPE if jnp.issubdtype(s.dtype, jnp.floating)
+            else s.dtype),
+        specs)
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+def lower_cell(arch: str, shape_name: str, mesh, *,
+               remat_policy: str = "full", seq_shard: bool = True,
+               extra_overrides: dict | None = None):
+    """Build fn + specs + shardings for one cell and lower it.
+
+    Returns (lowered, meta) — compile is the caller's second step.
+    ``seq_shard``: Megatron-SP-style residual sequence sharding (layout
+    knob for the §Perf hillclimb).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cfg, ov = _apply_overrides(cfg, shape.kind)
+    if extra_overrides:
+        ov = dict(ov, **extra_overrides)
+    accum = int(ov.get("accum", 1))
+    opt_dtype = jnp.dtype(ov.get("opt_dtype", "float32"))
+
+    meta = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "overrides": {k: str(v) for k, v in ov.items()},
+        "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "chips": int(mesh.devices.size),
+        "seq_shard": seq_shard,
+    }
+
+    with use_sharding_rules(mesh=mesh, seq_shard=seq_shard,
+                            decode_tp=(shape.kind == "decode"
+                                       and not ov.get("no_decode_tp"))):
+        if shape.kind == "train":
+            state_like = jax.eval_shape(
+                lambda: _train_state(cfg, opt_dtype))
+            sspec = named(mesh, state_pspecs(cfg, state_like, mesh))
+            batch_like = input_specs(cfg, shape)
+            bspec = named(mesh, batch_pspecs(cfg, shape, mesh, batch_like))
+            opt = AdamWConfig(schedule=cosine_schedule(3e-4, 2000, 100_000))
+            step = trainer.make_train_step(cfg, opt,
+                                           remat_policy=remat_policy,
+                                           accum=accum)
+            jitted = jax.jit(step, in_shardings=(sspec, bspec),
+                             out_shardings=(sspec, None))
+            with jax.set_mesh(mesh):
+                lowered = jitted.lower(state_like, batch_like)
+            return lowered, meta
+
+        params_like = _serve_param_specs(cfg)
+        pspec = named(mesh, param_pspecs(cfg, params_like, mesh))
+        if shape.kind == "prefill":
+            cache_like = transformer.cache_specs(
+                cfg, shape.global_batch, shape.seq_len)
+            cspec = named(mesh, cache_pspecs(cfg, cache_like, mesh))
+            batch_like = input_specs(cfg, shape)
+            bspec = named(mesh, batch_pspecs(cfg, shape, mesh, batch_like))
+
+            def prefill_step(params, batch, caches):
+                return transformer.prefill(
+                    cfg, params, batch["tokens"], caches,
+                    extra_embeds=batch.get("extra_embeds"))
+
+            jitted = jax.jit(prefill_step,
+                             in_shardings=(pspec, bspec, cspec),
+                             out_shardings=(None, cspec))
+            with jax.set_mesh(mesh):
+                lowered = jitted.lower(params_like, batch_like, cache_like)
+            return lowered, meta
+
+        # decode
+        cache_like = transformer.cache_specs(
+            cfg, shape.global_batch, shape.seq_len)
+        cspec = named(mesh, cache_pspecs(cfg, cache_like, mesh))
+        batch_like = input_specs(cfg, shape)
+        bspec = named(mesh, batch_pspecs(cfg, shape, mesh, batch_like))
+
+        def serve_step(params, batch, caches):
+            return transformer.decode_step(cfg, params, batch["token"], caches)
+
+        jitted = jax.jit(serve_step, in_shardings=(pspec, bspec, cspec),
+                         out_shardings=(None, cspec))
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(params_like, batch_like, cache_like)
+        return lowered, meta
+
+
+def _train_state(cfg, opt_dtype):
+    state = trainer.init_train_state(cfg, jax.random.PRNGKey(0))
+    if opt_dtype != jnp.float32:
+        state["opt"]["m"] = jax.tree.map(
+            lambda x: x.astype(opt_dtype), state["opt"]["m"])
+        state["opt"]["v"] = jax.tree.map(
+            lambda x: x.astype(opt_dtype), state["opt"]["v"])
+    return state
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             remat_policy: str = "full", seq_shard: bool = True,
+             extra_overrides: dict | None = None) -> dict:
+    """Lower + compile one cell; return the full result record."""
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    lowered, meta = lower_cell(arch, shape_name, mesh,
+                               remat_policy=remat_policy,
+                               seq_shard=seq_shard,
+                               extra_overrides=extra_overrides)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    hlo = compiled.as_text()
+    model_axis = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    # trip-count-aware per-device cost (launch/hlo_cost.py): XLA's own
+    # cost_analysis counts while bodies once, so scanned-layer models
+    # would report ~1 layer; the raw values are kept for comparison.
+    cost = hlo_cost.analyze(hlo, default_group=model_axis)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = int(mesh.devices.size)
+    mf = model_flops(cfg, shape)
+    roof = Roofline(
+        flops=cost.flops,
+        hbm_bytes=cost.bytes,
+        coll_bytes=cost.coll_ring_bytes,
+        chips=chips,
+        model_flops_per_chip=mf / chips,
+    )
+    rec = {
+        **meta,
+        "multi_pod": multi_pod,
+        "remat_policy": remat_policy,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "per_device_total": (ma.argument_size_in_bytes
+                                 + ma.output_size_in_bytes
+                                 - ma.alias_size_in_bytes
+                                 + ma.temp_size_in_bytes),
+        },
+        "collectives": {
+            "counts": {k: round(v) for k, v in cost.coll_counts.items()},
+            "raw_bytes": cost.coll_raw_bytes,
+            "ring_bytes_per_dev": cost.coll_ring_bytes,
+        },
+        "xla_cost_analysis": {   # raw (while-body-once) numbers, reference
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+        "roofline": roof.to_dict(),
+    }
+    return rec
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", choices=list_archs())
+    p.add_argument("--shape", choices=list(SHAPES))
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true",
+                   help="run single-pod AND multi-pod for each cell")
+    p.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    p.add_argument("--out", default="results")
+    args = p.parse_args(argv)
+
+    cells_: list[tuple[str, str]] = []
+    if args.all:
+        from ..configs import cells
+        cells_ = cells()
+    else:
+        if not args.arch or not args.shape:
+            p.error("--arch and --shape required unless --all")
+        if (args.shape == "long_500k"
+                and args.arch not in LONG_CONTEXT_ARCHS):
+            print(f"SKIP {args.arch}×long_500k: full-attention arch "
+                  f"(DESIGN.md §5)")
+            return 0
+        cells_ = [(args.arch, args.shape)]
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch, shape in cells_:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+            out_path = os.path.join(args.out, tag + ".json")
+            try:
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               remat_policy=args.remat)
+                with open(out_path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                r = rec["roofline"]
+                print(f"OK   {tag}: compile={rec['compile_s']}s "
+                      f"mem/dev={rec['memory']['per_device_total']/2**30:.2f}GiB "
+                      f"bound={r['bottleneck']} "
+                      f"t=({r['t_compute_s']:.2e},{r['t_memory_s']:.2e},"
+                      f"{r['t_collective_s']:.2e})s", flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                with open(out_path + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

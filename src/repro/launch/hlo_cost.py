@@ -1,0 +1,365 @@
+"""Trip-count-aware cost model over post-SPMD optimized HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE (validated:
+a lax.scan of length 4 and 8 report identical FLOPs), which makes it
+useless for scanned-layer models — an 88-layer stack reports ~1 layer.
+XLA, however, annotates every while with
+``backend_config={"known_trip_count":{"n":...}}``.  This module parses the
+HLO text into computations, propagates multipliers through the call graph
+(while bodies × trip count, everything else × 1), and accumulates:
+
+* **flops** — 2·|out|·K for every ``dot`` (K = product of the lhs
+  contracting dims), scaled by the enclosing multiplier;
+* **hbm bytes** — Σ (operand + output bytes) of *materializing*
+  instructions (fusions, dots, copies, converts, slices, collectives);
+  instructions inside fusion subcomputations don't touch HBM and are
+  excluded;
+* **collective bytes** — ring-model wire bytes per device, per op kind,
+  scaled by multiplier.
+
+Shapes in the optimized HLO are post-partitioning per-shard shapes, so
+every number is per-device.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-_]+)\s*\(.*\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w\.\-_]+)\s*=\s*((?:\([^)]*\)|\S+))\s+([\w\-]+)\(")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-_]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w\.\-_]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+# ops whose outputs/operands don't represent HBM traffic (while/conditional
+# carries are buffer-aliased in place; tuples/GTEs are pointer shuffling)
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "iota", "after-all", "partition-id", "replica-id",
+               "while", "conditional", "optimization-barrier", "call"}
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems = bytes_ = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dtype]
+    return elems, bytes_
+
+
+@dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclass
+class _Comp:
+    name: str
+    instrs: list = field(default_factory=list)
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_ring_bytes: float = 0.0
+    coll_counts: dict = field(default_factory=dict)      # op → weighted count
+    coll_raw_bytes: dict = field(default_factory=dict)   # op → weighted bytes
+    dot_flops_by_mult: dict = field(default_factory=dict)
+    # top contributors for the §Perf loop: (ring_bytes, op, shape, mult)
+    top_collectives: list = field(default_factory=list)
+    top_traffic: list = field(default_factory=list)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.bytes,
+            "coll_ring_bytes": self.coll_ring_bytes,
+            "coll_counts": self.coll_counts,
+            "coll_raw_bytes": self.coll_raw_bytes,
+        }
+
+
+def _parse_computations(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and "->" in line and "{" in line:
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = _Comp(m.group(1))
+                comps[cur.name] = cur
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.instrs.append(_Instr(m.group(1), m.group(2), m.group(3), line))
+    return comps
+
+
+def _entry_name(text: str, comps: dict[str, _Comp]) -> str | None:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-_]+)", text, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    return next(iter(comps)) if comps else None
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+def analyze(text: str, default_group: int = 1) -> HloCost:
+    comps = _parse_computations(text)
+    entry = _entry_name(text, comps)
+    if entry is None:
+        return HloCost()
+
+    # symbol table: instruction name -> type string (global; HLO names are
+    # unique program-wide in optimized dumps)
+    sym: dict[str, str] = {}
+    for c in comps.values():
+        for ins in c.instrs:
+            sym[ins.name] = ins.type_str
+
+    # multipliers + fusion-context propagation
+    mult: dict[str, float] = {entry: 1.0}
+    in_fusion: dict[str, bool] = {entry: False}
+    order = [entry]
+    seen = {entry}
+    while order:
+        cname = order.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        fuse_ctx = in_fusion[cname]
+        for ins in comp.instrs:
+            cm = _CALL_RE.findall(ins.line)
+            for br in _BRANCHES_RE.findall(ins.line):
+                cm += re.findall(r"[\w\.\-_]+", br)
+            if not cm:
+                continue
+            trip = 1
+            if ins.op == "while":
+                t = _TRIP_RE.search(ins.line)
+                trip = int(t.group(1)) if t else 1
+            callee_fuse = fuse_ctx or ins.op in (
+                "fusion", "reduce", "map", "sort", "scatter", "reduce-window",
+                "select-and-scatter", "reduce-scatter")
+            for callee in cm:
+                if callee not in comps:
+                    continue
+                add = m * (trip if ins.op == "while" else 1)
+                mult[callee] = mult.get(callee, 0.0) + add
+                # a computation is non-materializing only if EVERY
+                # caller reaches it through a fusion-like context
+                in_fusion[callee] = in_fusion.get(callee, True) \
+                    and callee_fuse
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    cost = HloCost()
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        fused = in_fusion.get(cname, False)
+        for ins in comp.instrs:
+            out_elems, out_bytes = _shape_elems_bytes(ins.type_str)
+            # ---- flops: dots count wherever they live ----
+            if ins.op == "dot":
+                contract = 1
+                cdims = _CONTRACT_RE.search(ins.line)
+                ops = _OPERAND_RE.findall(
+                    ins.line.split("dot(", 1)[1].split(")", 1)[0])
+                if cdims and ops:
+                    lhs_type = sym.get(ops[0], "")
+                    sm = _SHAPE_RE.search(lhs_type)
+                    if sm:
+                        dims = [int(d) for d in sm.group(2).split(",") if d]
+                        for idx in cdims.group(1).split(","):
+                            if idx:
+                                i = int(idx)
+                                if i < len(dims):
+                                    contract *= dims[i]
+                cost.flops += m * 2.0 * out_elems * contract
+                key = int(m)
+                cost.dot_flops_by_mult[key] = cost.dot_flops_by_mult.get(
+                    key, 0.0) + m * 2.0 * out_elems * contract
+            elif ins.op == "convolution":
+                cost.flops += m * 2.0 * out_elems  # lower bound
+
+            # ---- collectives ----
+            if any(ins.op.startswith(c) for c in COLLECTIVE_OPS):
+                if ins.op.endswith("-done"):
+                    continue
+                base = ins.op.replace("-start", "")
+                n = _group_size(ins.line, default_group)
+                cost.coll_counts[base] = cost.coll_counts.get(base, 0) + m
+                cost.coll_raw_bytes[base] = cost.coll_raw_bytes.get(
+                    base, 0.0) + m * out_bytes
+                if n > 1:
+                    if base == "all-reduce":
+                        rb = m * 2 * (n - 1) / n * out_bytes
+                    elif base == "collective-permute":
+                        rb = m * out_bytes
+                    else:
+                        rb = m * (n - 1) / n * out_bytes
+                    cost.coll_ring_bytes += rb
+                    cost.top_collectives.append(
+                        (rb, base, ins.type_str[:96], m))
+
+            # ---- hbm traffic: materializing instructions only ----
+            if fused or ins.op in _NO_TRAFFIC:
+                continue
+            operand_bytes = 0
+            marker = f" {ins.op}("
+            args = ins.line.split(marker, 1)[1].split(")", 1)[0] \
+                if marker in ins.line else ""
+            opnames = _OPERAND_RE.findall(args)
+
+            # in-place slice ops: XLA buffer-aliases the big operand —
+            # real traffic is the SLICE, not the array (a scanned layer
+            # stack would otherwise count ×trip_count)
+            if ins.op == "dynamic-slice":
+                tb = m * 2 * out_bytes                  # read + write slice
+                cost.bytes += tb
+                if tb > 1e9:
+                    cost.top_traffic.append((tb, ins.op, ins.type_str[:96], m))
+                continue
+            if ins.op == "dynamic-update-slice":
+                upd = (_shape_elems_bytes(sym.get(opnames[1], ""))[1]
+                       if len(opnames) > 1 else out_bytes)
+                tb = m * 2 * upd
+                cost.bytes += tb
+                if tb > 1e9:
+                    cost.top_traffic.append((tb, ins.op, ins.type_str[:96], m))
+                continue
+
+            slice_reads, out_adjust = _fusion_slice_io(ins, comps, sym) \
+                if ins.op == "fusion" else ({}, 0)
+            for i, opname in enumerate(opnames):
+                t = sym.get(opname)
+                if not t:
+                    continue
+                full = _shape_elems_bytes(t)[1]
+                # a fusion operand consumed only through an internal
+                # dynamic-slice reads the SLICE per call, not the full
+                # array
+                operand_bytes += min(full, slice_reads.get(i, full))
+            out_b = max(out_bytes - out_adjust, 0)
+            tb = m * (out_b + operand_bytes)
+            cost.bytes += tb
+            if tb > 1e9:
+                cost.top_traffic.append((tb, ins.op, ins.type_str[:96], m))
+    cost.top_collectives.sort(key=lambda t: -t[0])
+    cost.top_collectives = cost.top_collectives[:20]
+    cost.top_traffic.sort(key=lambda t: -t[0])
+    cost.top_traffic = cost.top_traffic[:20]
+    return cost
+
+
+_ALIAS_OPS = ("convert", "bitcast", "copy", "reshape", "transpose")
+
+
+def _fusion_slice_io(ins, comps, sym) -> tuple[dict[int, int], int]:
+    """For a fusion instruction: (operand index → bytes actually read,
+    output-bytes reduction).
+
+    * operands whose only internal consumers are dynamic-slice ops (or
+      convert/bitcast chains feeding them — the CPU backend's bf16→f32
+      float-normalization inserts such chains; on TPU they don't exist)
+      read the slice, not the array;
+    * an internal dynamic-update-slice targeting (an alias of) a
+      parameter is an in-place write — output priced at the update slice.
+    """
+    m = re.search(r"calls=%?([\w\.\-_]+)", ins.line)
+    if not m or m.group(1) not in comps:
+        return {}, 0
+    callee = comps[m.group(1)]
+    param_names: dict[str, int] = {}
+    local_types: dict[str, str] = {}
+    for i2 in callee.instrs:
+        local_types[i2.name] = i2.type_str
+        if i2.op == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", i2.line)
+            if pm:
+                param_names[i2.name] = int(pm.group(1))
+
+    def _args(i2):
+        if "(" not in i2.line:
+            return []
+        return _OPERAND_RE.findall(
+            i2.line.split("(", 1)[1].split(")", 1)[0])
+
+    # resolve unary alias chains back to parameters
+    alias: dict[str, int] = dict(param_names)
+    changed = True
+    while changed:
+        changed = False
+        for i2 in callee.instrs:
+            if i2.name in alias or i2.op not in _ALIAS_OPS:
+                continue
+            ops2 = _args(i2)
+            if len(ops2) >= 1 and ops2[0] in alias:
+                alias[i2.name] = alias[ops2[0]]
+                changed = True
+
+    reads: dict[int, int] = {}
+    ok: dict[int, bool] = {i: True for i in param_names.values()}
+    out_adjust = 0
+    for i2 in callee.instrs:
+        if i2.op == "parameter" or i2.op in _ALIAS_OPS:
+            continue
+        ops2 = _args(i2)
+        if i2.op == "dynamic-update-slice" and ops2 and ops2[0] in alias:
+            idx = alias[ops2[0]]
+            big = _shape_elems_bytes(local_types.get(ops2[0], ""))[1]
+            upd = (_shape_elems_bytes(local_types.get(ops2[1], ""))[1]
+                   if len(ops2) > 1 else 0)
+            reads[idx] = max(reads.get(idx, 0), upd)
+            out_adjust += max(big - upd, 0)
+            ops2 = ops2[1:]
+        for opname in ops2:
+            if opname in alias:
+                idx = alias[opname]
+                if i2.op == "dynamic-slice":
+                    _, b = _shape_elems_bytes(i2.type_str)
+                    reads[idx] = max(reads.get(idx, 0), b)
+                elif i2.op != "dynamic-update-slice":
+                    ok[idx] = False
+    return {i: b for i, b in reads.items() if ok.get(i)}, out_adjust

@@ -1,0 +1,180 @@
+"""Roofline model: three terms from a compiled dry-run artifact.
+
+Hardware constants (TPU v5e-like, per system prompt):
+  197 TFLOP/s bf16 per chip · 819 GB/s HBM · ~50 GB/s/link ICI.
+
+``cost_analysis()`` on the CPU backend is per-device (validated in
+DESIGN.md §7); HLO text shapes are post-SPMD per-shard, so collective
+bytes summed from them are per-device too.  Ring-model scaling per op:
+
+  all-reduce       2(n−1)/n · B     (reduce-scatter + all-gather phases)
+  all-gather       (n−1)/n · B_out
+  reduce-scatter   (n−1)/n · B_in
+  all-to-all       (n−1)/n · B
+  collective-permute   1 · B
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one HLO instruction: "%x = TYPE opname(...)" where TYPE may be a tuple
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict[str, int] = field(default_factory=dict)
+    raw_bytes: dict[str, int] = field(default_factory=dict)
+    ring_bytes: float = 0.0      # per-device bytes on the wire (ring model)
+
+    def add(self, op: str, nbytes: int, n: int) -> None:
+        self.counts[op] = self.counts.get(op, 0) + 1
+        self.raw_bytes[op] = self.raw_bytes.get(op, 0) + nbytes
+        if n <= 1:
+            return
+        if op == "all-reduce":
+            self.ring_bytes += 2 * (n - 1) / n * nbytes
+        elif op in ("all-gather", "reduce-scatter", "all-to-all"):
+            self.ring_bytes += (n - 1) / n * nbytes
+        else:  # collective-permute
+            self.ring_bytes += nbytes
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> CollectiveStats:
+    """Sum per-device collective bytes from post-SPMD HLO text.
+
+    "done"-halves of async pairs are skipped (counted at "-start"); plain
+    (non-async) ops are counted once.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(type_str)
+        n = _group_size(line, default_group)
+        stats.add(op, nbytes, n)
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    chips: int
+    model_flops_per_chip: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful
+        (catches remat/redundancy waste).  >1 means HLO under-counts
+        (e.g. fused ops); <1 means recompute/overhead."""
+        if self.flops == 0:
+            return 0.0
+        return self.model_flops_per_chip / self.flops
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on achievable MFU for this cell: useful FLOPs per
+        chip / (peak FLOP/s × bound time)."""
+        if self.t_bound == 0:
+            return 0.0
+        return self.model_flops_per_chip / PEAK_FLOPS / self.t_bound
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops_per_chip": self.model_flops_per_chip,
+            "useful_flop_fraction": self.useful_flop_fraction,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def model_flops(cfg, shape, n_tokens: int | None = None) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N_active·D (inference fwd),
+    N = active params (MoE: top-k + shared)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,18 @@
+"""Model substrate: unified config-driven decoder + family-specific blocks."""
+from . import frontends, layers, moe, recurrent, transformer, xlstm
+from .transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_specs,
+    cache_specs,
+    prefill,
+)
+
+__all__ = [
+    "frontends", "layers", "moe", "recurrent", "transformer", "xlstm",
+    "decode_step", "forward", "init_cache", "init_params", "loss_fn",
+    "param_specs", "cache_specs", "prefill",
+]

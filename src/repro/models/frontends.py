@@ -1,0 +1,30 @@
+"""Modality frontends — STUBS per the assignment.
+
+``[audio]`` / ``[vlm]`` entries specify the transformer BACKBONE only; the
+modality frontend provides precomputed embeddings:
+
+* **musicgen-large**: the EnCodec encoder is stubbed — the backbone's
+  inputs are the (already-quantized) codebook token ids themselves
+  (vocab 2048); ``make_audio_tokens`` synthesizes a plausible id stream.
+  The 4-codebook delay interleaving is a frontend concern and not modeled
+  (DESIGN.md §8).
+* **qwen2-vl-7b**: the vision tower (ViT) is stubbed — ``make_patch_embeds``
+  produces patch embeddings of shape (B, n_visual_tokens, d_model) that the
+  backbone consumes as ``extra_embeds`` with M-RoPE positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_audio_tokens(key, batch: int, seq: int, vocab: int = 2048):
+    """Stub EnCodec token stream."""
+    return jax.random.randint(key, (batch, seq), 0, vocab, dtype=jnp.int32)
+
+
+def make_patch_embeds(key, batch: int, n_tokens: int, d_model: int,
+                      dtype=jnp.bfloat16):
+    """Stub ViT patch embeddings (already projected into d_model)."""
+    return (jax.random.normal(key, (batch, n_tokens, d_model)) * 0.02
+            ).astype(dtype)

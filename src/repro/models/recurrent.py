@@ -1,0 +1,141 @@
+"""Griffin/RecurrentGemma recurrent block: temporal conv + RG-LRU.
+
+RG-LRU (De et al., arXiv:2402.19427 eq. 5–7):
+
+    r_t = σ(W_a x_t)                      recurrence gate
+    i_t = σ(W_x x_t)                      input gate
+    a_t = exp(−c · softplus(Λ) ⊙ r_t)     (c = 8)
+    h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the linear
+recurrence (log-depth — the TPU-friendly form; the Pallas kernel in
+``repro.kernels.rglru_scan`` implements the same contraction blockwise);
+decode is the O(1) single-step update — this is why recurrentgemma runs
+the ``long_500k`` cell (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+Params = dict
+_C = 8.0  # RG-LRU sharpness constant
+
+
+def init_rglru_block(cfg, key) -> Params:
+    d = cfg.d_model
+    dr = cfg.rec.d_rnn or d
+    w = cfg.rec.conv_width
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    # Λ init so that a ∈ [0.9, 0.999] at r=0.5 (paper App. A)
+    lam = jax.random.uniform(ks[4], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam) / (_C * 0.5)))
+    # gates are block-diagonal with n_heads blocks (official recurrentgemma
+    # BlockDiagonalLinear) — batched small matmuls, TPU-friendly
+    nb = cfg.n_heads if dr % cfg.n_heads == 0 else 1
+    dh = dr // nb
+    return {
+        "w_x": dense_init(ks[0], (d, dr), dt),       # recurrent branch in
+        "w_gate": dense_init(ks[1], (d, dr), dt),    # gelu gate branch
+        "conv_w": dense_init(ks[2], (w, dr), dt, scale=1.0 / math.sqrt(w)),
+        "conv_b": jnp.zeros((dr,), dt),
+        "w_a": dense_init(ks[3], (nb, dh, dh), dt),
+        "w_i": dense_init(ks[5], (nb, dh, dh), dt),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(jax.random.fold_in(ks[0], 7), (dr, d), dt),
+    }
+
+
+def _block_diag(x, w):
+    """x: (B, S, dr); w: (nb, dh, dh) block-diagonal — batched matmul."""
+    B, S, dr = x.shape
+    nb, dh, _ = w.shape
+    xb = x.reshape(B, S, nb, dh)
+    return jnp.einsum("bsnd,nde->bsne", xb, w).reshape(B, S, dr)
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B, S, dr); w: (W, dr) depthwise.  state: (B, W-1, dr) tail of
+    previous tokens for decode."""
+    W = w.shape[0]
+    if state is not None:
+        x_ext = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    else:
+        x_ext = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(x_ext[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    new_state = x_ext[:, -(W - 1):] if W > 1 else None
+    return out, new_state
+
+
+def rglru_scan(x_in, a, h0=None):
+    """Linear recurrence h_t = a_t·h_{t−1} + x_t via associative scan.
+
+    x_in, a: (B, S, dr); h0: (B, dr) initial state or None.
+    The combine ((a1,x1)∘(a2,x2) = (a1·a2, a2·x1+x2)) is associative.
+    """
+    if h0 is not None:
+        # fold the initial state in as a virtual step
+        x_in = jnp.concatenate([h0[:, None], x_in], axis=1)
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, a2 * x1 + x2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h
+
+
+def rglru_forward(cfg, p: Params, x, state=None):
+    """Full Griffin recurrent block.  x: (B, S, d).
+
+    state: dict(conv, h) for decode, else None.
+    Returns (out (B,S,d), new_state)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(cdt))
+    xr = x @ p["w_x"].astype(cdt)
+    conv_state = state["conv"] if state is not None else None
+    xr, new_conv = _causal_conv(xr, p["conv_w"].astype(cdt),
+                                p["conv_b"].astype(cdt), conv_state)
+
+    r = jax.nn.sigmoid(_block_diag(xr.astype(jnp.float32),
+                                   p["w_a"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(_block_diag(xr.astype(jnp.float32),
+                                   p["w_i"].astype(jnp.float32)))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (B,S,dr) fp32
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xr.astype(jnp.float32))
+
+    if state is not None and x.shape[1] == 1:
+        h_prev = state["h"]
+        h = a[:, 0] * h_prev + gated_x[:, 0]
+        out_h = h[:, None]
+        new_h = h
+    else:
+        h0 = state["h"] if state is not None else None
+        out_h = rglru_scan(gated_x, a, h0)
+        new_h = out_h[:, -1]
+
+    out = (out_h.astype(cdt) * gate) @ p["w_out"].astype(cdt)
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv.astype(state["conv"].dtype),
+                     "h": new_h}
+    return out, new_state
+
+
+def init_rglru_state(cfg, batch: int, dtype) -> Params:
+    dr = cfg.rec.d_rnn or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.rec.conv_width - 1, dr), dtype),
+        "h": jnp.zeros((batch, dr), jnp.float32),
+    }

@@ -1,0 +1,299 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM + sLSTM.
+
+mLSTM (matrix memory, §2.3): per head,
+    C_t = f_t C_{t−1} + i_t v_t k_tᵀ       (d_h × d_h matrix memory)
+    n_t = f_t n_{t−1} + i_t k_t
+    h_t = o_t ⊙ (C_t q_t) / max(|n_tᵀ q_t|, 1)
+with exponential input gate i and stabilizer m (log-space max gate).
+
+Training/prefill uses the **chunkwise-parallel form** (intra-chunk
+quadratic attention-like contraction + inter-chunk recurrent state), so
+prefill_32k is O(S·chunk) not O(S²) and the ``long_500k`` decode cell is
+an O(1) state update — xlstm is one of the two archs that run it.
+
+sLSTM (scalar memory, §2.2) keeps the recurrent hidden-to-hidden matrix
+R, which makes it *inherently sequential* — implemented as a
+``jax.lax.scan`` over time (noted in DESIGN.md §5; this is the published
+architecture's property, not an implementation shortcut).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.context import constrain
+from .layers import dense_init
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm_block(cfg, key) -> Params:
+    d = cfg.d_model
+    di = int(d * cfg.rec.mlstm_proj_factor)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    # q/k/v are block-diagonal with 4 blocks (official xLSTM
+    # qkv_proj_blocksize=4) — batched small matmuls
+    nb = 4 if di % 4 == 0 else 1
+    dq = di // nb
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * di), dt),       # x branch + o gate
+        "w_q": dense_init(ks[1], (nb, dq, dq), dt),
+        "w_k": dense_init(ks[2], (nb, dq, dq), dt),
+        "w_v": dense_init(ks[3], (nb, dq, dq), dt),
+        "w_i": dense_init(ks[4], (di, H), dt, scale=0.02),
+        "w_f": dense_init(ks[5], (di, H), dt, scale=0.02),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),          # forget-open init
+        "w_down": dense_init(ks[6], (di, d), dt),
+    }
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, C0, n0, m0):
+    """One chunk of the chunkwise-parallel mLSTM.
+
+    q,k,v: (B, H, L, dh); log_i/log_f: (B, H, L).
+    C0: (B, H, dh, dh), n0: (B, H, dh), m0: (B, H).
+    Returns h (B,H,L,dh) and final (C, n, m).
+    """
+    B, H, L, dh = q.shape
+    lf_cum = jnp.cumsum(log_f, axis=-1)                    # (B,H,L)
+    log_g = lf_cum + m0[..., None]                         # decay from chunk start
+    log_a = log_i + lf_cum[..., -1:] - lf_cum              # decay to chunk end
+    # exact stabilizer (xLSTM App. D.2):
+    #   m_t = max(lf_cum_t + m0, max_{s<=t}(lf_cum_t − lf_cum_s + log_i_s))
+    D = lf_cum[..., :, None] - lf_cum[..., None, :] + log_i[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    D = jnp.where(mask, D, -jnp.inf)
+    m_t = jnp.maximum(log_g, D.max(axis=-1))               # (B,H,L)
+
+    scale = 1.0 / math.sqrt(dh)
+    # inter-chunk contribution: q_t · C0, decayed from chunk start
+    inter = jnp.einsum("bhld,bhde->bhle", q, C0,
+                       preferred_element_type=jnp.float32) * scale
+    inter = inter * jnp.exp(log_g - m_t)[..., None]
+    n_inter = jnp.einsum("bhld,bhd->bhl", q, n0,
+                         preferred_element_type=jnp.float32) * scale \
+        * jnp.exp(log_g - m_t)
+
+    # intra-chunk attention-like contribution
+    S = jnp.einsum("bhld,bhsd->bhls", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    W = jnp.where(mask, jnp.exp(D - m_t[..., None]), 0.0)
+    intra = jnp.einsum("bhls,bhsd->bhld", S * W, v,
+                       preferred_element_type=jnp.float32)
+    n_intra = (S * W).sum(-1)
+
+    num = inter + intra
+    den = n_inter + n_intra
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # chunk-final state
+    m_end = jnp.maximum(lf_cum[..., -1] + m0, log_a.max(axis=-1))
+    decay_all = jnp.exp(lf_cum[..., -1] + m0 - m_end)      # (B,H)
+    w_s = jnp.exp(log_a - m_end[..., None])                # (B,H,L)
+    C = (C0 * decay_all[..., None, None]
+         + jnp.einsum("bhl,bhld,bhle->bhde", w_s, v, k,
+                      preferred_element_type=jnp.float32))
+    n = n0 * decay_all[..., None] + jnp.einsum(
+        "bhl,bhld->bhd", w_s, k, preferred_element_type=jnp.float32)
+    return h, (C, n, m_end)
+
+
+def mlstm_forward(cfg, p: Params, x, state=None, chunk: int = 1024):
+    # chunk ≈ dh balances the two traffic terms (§Perf X2): chunk-boundary
+    # C-states cost S/L·dh² while intra-chunk D/W/S matrices cost S·L —
+    # L=256 was boundary-dominated 16:1; L=dh=1024 equalizes them.
+    """x: (B, S, d) → (B, S, d).  state: dict(C, n, m) or None."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    H = cfg.n_heads
+    di = int(d * cfg.rec.mlstm_proj_factor)
+    dh = di // H
+    up = x @ p["w_up"].astype(cdt)
+    xb, og = jnp.split(up, 2, axis=-1)
+    o = jax.nn.sigmoid(og.astype(jnp.float32))
+    def _bd(x, w):
+        nb, dq, _ = w.shape
+        return jnp.einsum("bsnd,nde->bsne",
+                          x.reshape(B, S, nb, dq), w).reshape(B, S, di)
+
+    q = _bd(xb, p["w_q"].astype(cdt)).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    k = _bd(xb, p["w_k"].astype(cdt)).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    v = _bd(xb, p["w_v"].astype(cdt)).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    # H=4 heads cannot map onto a 16-way model axis: the chunk recurrence
+    # runs shard-LOCAL (batch only); q/k/v stay bf16 with f32 accumulation
+    # in the chunk einsums (§Perf X1)
+    q, k, v = (constrain(t, "batch_only") for t in (q, k, v))
+    log_i = (xb.astype(jnp.float32) @ p["w_i"].astype(jnp.float32)
+             + p["b_i"]).transpose(0, 2, 1)                 # (B,H,S)
+    log_f = jax.nn.log_sigmoid(
+        xb.astype(jnp.float32) @ p["w_f"].astype(jnp.float32)
+        + p["b_f"]).transpose(0, 2, 1)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+    # matrix-memory carries stay batch-local like q/k/v — a model-axis
+    # sharding on dh would all-reduce the full C per chunk (§Perf X3)
+    C0 = constrain(C0, "batch_only")
+    n0 = constrain(n0, "batch_only")
+    m0 = constrain(m0, "batch_only")
+
+    if S == 1:
+        # decode: O(1) recurrent update
+        lf, li = log_f[..., 0], log_i[..., 0]
+        m_new = jnp.maximum(lf + m0, li)
+        f_ = jnp.exp(lf + m0 - m_new)
+        i_ = jnp.exp(li - m_new)
+        C = C0 * f_[..., None, None] + i_[..., None, None] * jnp.einsum(
+            "bhd,bhe->bhde", v[:, :, 0], k[:, :, 0],
+            preferred_element_type=jnp.float32)
+        n = n0 * f_[..., None] + i_[..., None] * k[:, :, 0].astype(jnp.float32)
+        qd = q[:, :, 0].astype(jnp.float32) / math.sqrt(dh)
+        num = jnp.einsum("bhde,bhe->bhd", C, qd,
+                         preferred_element_type=jnp.float32)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", n, qd,
+                                 preferred_element_type=jnp.float32))
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        h = h[:, :, None]                                   # (B,H,1,dh)
+        new_state = {"C": C, "n": n, "m": m_new}
+    else:
+        L = min(chunk, S)
+        assert S % L == 0, f"seq {S} not divisible by chunk {L}"
+        nchunks = S // L
+
+        def body(carry, inputs):
+            C0_, n0_, m0_ = carry
+            qc, kc, vc, lic, lfc = inputs
+            # checkpoint the chunk: backward recomputes the intra-chunk
+            # matrices from the (much smaller) chunk inputs + carry
+            h, (C_, n_, m_) = jax.checkpoint(_mlstm_chunk)(
+                qc, kc, vc, lic, lfc, C0_, n0_, m0_)
+            return (C_, n_, m_), h
+
+        qs = q.reshape(B, H, nchunks, L, dh).transpose(2, 0, 1, 3, 4)
+        ks_ = k.reshape(B, H, nchunks, L, dh).transpose(2, 0, 1, 3, 4)
+        vs = v.reshape(B, H, nchunks, L, dh).transpose(2, 0, 1, 3, 4)
+        lis = log_i.reshape(B, H, nchunks, L).transpose(2, 0, 1, 3)
+        lfs = log_f.reshape(B, H, nchunks, L).transpose(2, 0, 1, 3)
+        (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), (qs, ks_, vs, lis, lfs))
+        h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dh)
+        new_state = {"C": C, "n": n, "m": m}
+
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, di)
+    h = h * o
+    out = h.astype(cdt) @ p["w_down"].astype(cdt)
+    return out, (new_state if state is not None else None)
+
+
+def init_mlstm_state(cfg, batch: int) -> Params:
+    di = int(cfg.d_model * cfg.rec.mlstm_proj_factor)
+    H = cfg.n_heads
+    dh = di // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm_block(cfg, key) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    f = int(d * cfg.rec.slstm_proj_factor)
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), dt),          # z i f o pre-acts
+        "r": dense_init(ks[1], (H, dh, 4 * dh), dt,
+                        scale=1.0 / math.sqrt(dh)),         # recurrent, per head
+        "b": jnp.concatenate([jnp.zeros((3 * d,)), jnp.full((d,), 1.0)]
+                             ).astype(jnp.float32),
+        "w_up": dense_init(ks[2], (d, 2 * f), dt),          # gated FFN
+        "w_down": dense_init(ks[3], (f, d), dt),
+    }
+
+
+def slstm_forward(cfg, p: Params, x, state=None):
+    """sLSTM with exponential gating + stabilizer; sequential over time.
+
+    x: (B, S, d); state: dict(h, c, n, m) each (B, d) except m (B, d)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    pre = (x @ p["w_in"].astype(cdt)).astype(jnp.float32)   # (B,S,4d)
+    # the time loop is inherently sequential: every per-step operand must
+    # be shard-LOCAL (batch-sharded only) or the scan emits a collective
+    # per timestep (§Perf X1: measured 24 576 per-step all-gathers/ARs)
+    pre = constrain(pre, "batch_only")
+
+    if state is None:
+        h0 = jnp.zeros((B, d), jnp.float32)
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.ones((B, d), jnp.float32)
+        m0 = jnp.zeros((B, d), jnp.float32)
+    else:
+        h0, c0, n0, m0 = state["h"], state["c"], state["n"], state["m"]
+    # the sequential carry must stay batch-local — any model-axis
+    # sharding of h turns every timestep into a collective
+    h0, c0, n0, m0 = (constrain(t, "batch_only")
+                      for t in (h0, c0, n0, m0))
+
+    # recurrent weights are small (16 MB); leave their layout to XLA —
+    # an explicit replication constraint forces the r-GRADIENT all-reduce
+    # inside the time loop (measured: +774 GB/dev, §Perf X1a refuted)
+    r = p["r"].astype(jnp.float32)
+    b = p["b"]
+
+    def step(carry, pre_t):
+        h, c, n, m = carry
+        hh = h.reshape(B, H, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hh, r).reshape(B, 4 * d)
+        z, i, f, o = jnp.split(pre_t + rec + b, 4, axis=-1)
+        z = jnp.tanh(z)
+        o = jax.nn.sigmoid(o)
+        log_f = jax.nn.log_sigmoid(f)
+        m_new = jnp.maximum(log_f + m, i)
+        i_ = jnp.exp(i - m_new)
+        f_ = jnp.exp(log_f + m - m_new)
+        c_new = f_ * c + i_ * z
+        n_new = f_ * n + i_
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    (h, c, n, m), hs = jax.lax.scan(step, (h0, c0, n0, m0),
+                                    pre.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(cdt)                   # (B,S,d)
+    # gated FFN tail (xLSTM block post-projection)
+    u = y @ p["w_up"].astype(cdt)
+    a, g = jnp.split(u, 2, axis=-1)
+    y = (a * jax.nn.gelu(g)) @ p["w_down"].astype(cdt)
+    new_state = None
+    if state is not None:
+        new_state = {"h": h, "c": c, "n": n, "m": m}
+    return y, new_state
+
+
+def init_slstm_state(cfg, batch: int) -> Params:
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }

@@ -1,0 +1,5 @@
+"""Serving substrate: paged KV arena + continuous-batching engine."""
+from .engine import Request, ServingEngine
+from .kv_cache import PagedKVArena, PageTable
+
+__all__ = ["Request", "ServingEngine", "PagedKVArena", "PageTable"]

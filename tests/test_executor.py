@@ -1,0 +1,122 @@
+"""Executor semantics (paper §III-B/C): saxpy, repeats, errors, stealing."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Executor, Heteroflow
+
+
+@pytest.fixture(scope="module")
+def executor():
+    with Executor(num_workers=4) as ex:
+        yield ex
+
+
+def test_saxpy_end_to_end(executor):
+    N = 4096
+    x = np.zeros(N, np.float32)
+    y = np.zeros(N, np.float32)
+    G = Heteroflow("saxpy")
+    hx = G.host(lambda: x.__setitem__(slice(None), 1.0))
+    hy = G.host(lambda: y.__setitem__(slice(None), 2.0))
+    px = G.pull(x)
+    py = G.pull(y)
+    saxpy = jax.jit(lambda a, xx, yy: a * xx + yy)
+    k = G.kernel(saxpy, 2.0, px, py, writes=(py,))
+    push = G.push(py, y)
+    hx.precede(px)
+    hy.precede(py)
+    k.succeed(px, py).precede(push)
+    assert executor.run(G).result(timeout=60) == 1
+    np.testing.assert_allclose(y, 4.0)
+
+
+def test_run_n_stateful(executor):
+    log = []
+    G = Heteroflow()
+    a = G.host(lambda: log.append("a"))
+    b = G.host(lambda: log.append("b"))
+    a.precede(b)
+    assert executor.run_n(G, 5).result(timeout=60) == 5
+    assert len(log) == 10
+    # order within every iteration
+    for i in range(0, 10, 2):
+        assert log[i] == "a" and log[i + 1] == "b"
+
+
+def test_run_n_zero(executor):
+    G = Heteroflow()
+    G.host(lambda: None)
+    assert executor.run_n(G, 0).result(timeout=10) == 0
+
+
+def test_run_until(executor):
+    counter = []
+    G = Heteroflow()
+    G.host(lambda: counter.append(1))
+    fut = executor.run_until(G, lambda: len(counter) >= 7)
+    assert fut.result(timeout=60) == 7
+    assert len(counter) == 7
+
+
+def test_error_propagation(executor):
+    G = Heteroflow()
+    G.host(lambda: 1 / 0)
+    with pytest.raises(ZeroDivisionError):
+        executor.run(G).result(timeout=60)
+
+
+def test_error_skips_downstream(executor):
+    ran = []
+    G = Heteroflow()
+    bad = G.host(lambda: 1 / 0)
+    after = G.host(lambda: ran.append(1))
+    bad.precede(after)
+    with pytest.raises(ZeroDivisionError):
+        executor.run(G).result(timeout=60)
+    assert not ran
+
+
+def test_thread_safe_submission(executor):
+    results = []
+
+    def submit(i):
+        G = Heteroflow(f"t{i}")
+        G.host(lambda i=i: results.append(i))
+        return executor.run(G)
+
+    futs = []
+    threads = [threading.Thread(target=lambda i=i: futs.append(submit(i)))
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    executor.wait_for_all()
+    assert sorted(results) == list(range(8))
+
+
+def test_kernel_chaining_device_dataflow(executor):
+    """A kernel may consume another kernel's output without a host trip."""
+    G = Heteroflow()
+    import jax.numpy as jnp
+    k1 = G.kernel(jax.jit(lambda: jnp.arange(8.0)))
+    k2 = G.kernel(jax.jit(lambda a: a * 2), k1)
+    k1.precede(k2)
+    executor.run(G).result(timeout=60)
+    np.testing.assert_allclose(np.asarray(k2._node.state["result"]),
+                               np.arange(8.0) * 2)
+
+
+def test_wide_graph_parallelism_and_stats():
+    with Executor(num_workers=4) as ex:
+        G = Heteroflow()
+        gate = threading.Barrier(4, timeout=30)
+        for _ in range(4):
+            G.host(lambda: gate.wait())   # deadlocks unless 4 run in parallel
+        assert ex.run(G).result(timeout=60) == 1
+        stats = ex.stats()
+        assert stats["executed"] == 4

@@ -1,0 +1,96 @@
+"""Task-graph semantics (paper §III-A)."""
+import numpy as np
+import pytest
+
+from repro.core import Heteroflow, TaskType
+
+
+def test_task_factories_and_types():
+    hf = Heteroflow("g")
+    h = hf.host(lambda: 1)
+    p = hf.pull(np.zeros(4))
+    k = hf.kernel(lambda a: a, p)
+    s = hf.push(p, np.zeros(4))
+    ph = hf.placeholder()
+    assert h.type == TaskType.HOST
+    assert p.type == TaskType.PULL
+    assert k.type == TaskType.KERNEL
+    assert s.type == TaskType.PUSH
+    assert ph.type == TaskType.PLACEHOLDER
+    assert len(hf) == 5
+
+
+def test_precede_succeed_symmetry():
+    hf = Heteroflow()
+    a, b, c = (hf.host(lambda: None, name=n) for n in "abc")
+    a.precede(b, c)
+    assert a.num_successors == 2
+    assert b.num_dependents == 1
+    d = hf.host(lambda: None, name="d")
+    d.succeed(b, c)
+    assert d.num_dependents == 2
+
+
+def test_self_dependency_rejected():
+    hf = Heteroflow()
+    a = hf.host(lambda: None)
+    with pytest.raises(ValueError):
+        a.precede(a)
+
+
+def test_cycle_detected():
+    hf = Heteroflow()
+    a, b = hf.host(lambda: None), hf.host(lambda: None)
+    a.precede(b)
+    b.precede(a)
+    assert not hf.acyclic()
+    assert hf.topological_order() is None
+
+
+def test_topological_order_respects_edges():
+    hf = Heteroflow()
+    nodes = [hf.host(lambda: None, name=str(i)) for i in range(20)]
+    rng = np.random.default_rng(0)
+    edges = set()
+    for _ in range(40):
+        i, j = sorted(rng.choice(20, 2, replace=False))
+        if (i, j) not in edges:
+            edges.add((i, j))
+            nodes[i].precede(nodes[j])
+    order = hf.topological_order()
+    pos = {n.id: i for i, n in enumerate(order)}
+    for i, j in edges:
+        assert pos[nodes[i]._node.id] < pos[nodes[j]._node.id]
+
+
+def test_push_requires_pull_source():
+    hf = Heteroflow()
+    k = hf.kernel(lambda: 0)
+    with pytest.raises(TypeError):
+        hf.push(k, np.zeros(2))
+
+
+def test_placeholder_rebind_and_empty_guard():
+    hf = Heteroflow()
+    ph = hf.placeholder()
+    out = []
+    ph.rebind(lambda: out.append(1))
+    assert ph.type == TaskType.PLACEHOLDER
+    from repro.core import Task
+    empty = Task()
+    with pytest.raises(RuntimeError):
+        empty.precede(ph)
+
+
+def test_dot_dump():
+    hf = Heteroflow("viz")
+    a = hf.host(lambda: None, name="alpha")
+    p = hf.pull(np.zeros(2), name="pl")
+    a.precede(p)
+    dot = hf.dump()
+    assert 'digraph "viz"' in dot
+    assert "alpha" in dot and "->" in dot
+    import io
+    buf = io.StringIO()
+    hf.dump(buf)
+    assert buf.getvalue() == dot

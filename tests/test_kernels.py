@@ -1,0 +1,99 @@
+"""Pallas kernel sweeps: shapes × dtypes vs pure-jnp oracles
+(interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (decode_attention, flash_attention, moe_gating,
+                           rglru_scan)
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gating.ref import moe_gating_ref
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+        jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,K,S,D,win,qb,kb", [
+    (2, 4, 2, 256, 64, None, 128, 128),
+    (1, 4, 1, 100, 32, None, 64, 32),      # MQA + ragged seq
+    (2, 2, 2, 128, 16, 48, 32, 64),        # sliding window
+    (1, 8, 8, 64, 128, None, 64, 64),      # MHA, lane-width head dim
+])
+def test_flash_attention_sweep(dtype, B, H, K, S, D, win, qb, kb):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, K, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, K, D)).astype(dtype)
+    out = flash_attention(q, k, v, window=win, q_block=qb, kv_block=kb)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), window=win
+                        ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOLS[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,K,S,D,kb", [
+    (2, 8, 2, 256, 64, 64),
+    (1, 4, 4, 100, 32, 32),
+    (3, 2, 1, 64, 16, 16),
+])
+def test_decode_attention_sweep(dtype, B, H, K, S, D, kb):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, H, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, K, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, K, D)).astype(dtype)
+    vl = jnp.array([max(1, S - 7 * i) for i in range(B)], jnp.int32)
+    out = decode_attention(q, k, v, vl, kv_block=kb)
+    ref = decode_attention_ref(q, k, v, vl)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOLS[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,dr,ch,db", [
+    (2, 64, 128, 32, 64),
+    (1, 100, 96, 16, 96),                   # ragged time
+    (2, 37, 32, 8, 32),
+])
+def test_rglru_scan_sweep(dtype, B, S, dr, ch, db):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = jax.random.normal(ks[0], (B, S, dr)).astype(dtype)
+    a = jax.nn.sigmoid(jax.random.normal(ks[1], (B, S, dr))).astype(dtype)
+    h0 = jax.random.normal(ks[2], (B, dr), jnp.float32)
+    out = rglru_scan(x, a, h0, chunk=ch, channel_block=db)
+    ref = rglru_scan_ref(x, a, h0)
+    tol = dict(rtol=1e-4, atol=1e-4) if dtype == jnp.float32 \
+        else dict(rtol=1e-1, atol=1e-1)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+@pytest.mark.parametrize("T,E,k,C,tb", [
+    (128, 16, 2, 24, 32),
+    (100, 8, 1, 16, 32),                    # ragged tokens
+    (256, 32, 4, 40, 64),
+    (64, 4, 2, 8, 16),                      # heavy capacity drops
+])
+def test_moe_gating_sweep(T, E, k, C, tb):
+    logits = jax.random.normal(jax.random.PRNGKey(T), (T, E))
+    out = moe_gating(logits, top_k=k, capacity=C, token_block=tb)
+    ref = moe_gating_ref(logits, top_k=k, capacity=C)
+    for o, r, name in zip(out, ref, ["eids", "gates", "slots", "keep"]):
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(r, np.float32),
+                                   rtol=1e-5, atol=1e-6, err_msg=name)
+
+
+def test_moe_gating_capacity_invariant():
+    """No expert slot is ever assigned twice among kept entries."""
+    T, E, k, C = 512, 8, 2, 32
+    logits = jax.random.normal(jax.random.PRNGKey(9), (T, E)) * 4
+    eids, gates, slots, keep = moe_gating(logits, top_k=k, capacity=C)
+    kept = np.asarray(slots).reshape(-1)[np.asarray(keep).reshape(-1)]
+    assert len(kept) == len(set(kept.tolist()))
+    assert (np.asarray(gates) >= 0).all()

@@ -1,0 +1,93 @@
+"""Buddy allocator (paper §III-C) — unit + hypothesis property tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BuddyAllocator, OutOfMemory
+from repro.serving import PagedKVArena
+
+
+def test_basic_alloc_free_coalesce():
+    b = BuddyAllocator(1024, 64)
+    offs = [b.allocate(64) for _ in range(16)]
+    assert sorted(offs) == list(range(0, 1024, 64))
+    with pytest.raises(OutOfMemory):
+        b.allocate(1)
+    for o in offs:
+        b.free(o)
+    assert b.largest_free_block() == 1024
+    assert b.bytes_in_use == 0
+
+
+def test_split_and_rounding():
+    b = BuddyAllocator(1024, 64)
+    o = b.allocate(65)          # rounds to 128
+    assert b.bytes_in_use == 128
+    b.free(o)
+
+
+def test_double_free_rejected():
+    b = BuddyAllocator(256, 64)
+    o = b.allocate(64)
+    b.free(o)
+    with pytest.raises(ValueError):
+        b.free(o)
+
+
+def test_oversize_rejected():
+    b = BuddyAllocator(256, 64)
+    with pytest.raises(OutOfMemory):
+        b.allocate(512)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 4096)),
+                min_size=1, max_size=120))
+def test_invariants_under_random_ops(ops):
+    """Free + allocated blocks always partition the arena exactly."""
+    b = BuddyAllocator(1 << 16, 256)
+    live = []
+    for is_free, size in ops:
+        if is_free and live:
+            b.free(live.pop(size % len(live)))
+        else:
+            try:
+                live.append(b.allocate(size))
+            except OutOfMemory:
+                pass
+        b.check_invariants()
+    for o in live:
+        b.free(o)
+    b.check_invariants()
+    assert b.bytes_in_use == 0
+    assert b.largest_free_block() == 1 << 16
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=40))
+def test_kv_arena_accounting(request_sizes):
+    arena = PagedKVArena(n_pages=256, page_tokens=16, kv_bytes_per_token=64)
+    admitted = []
+    for i, tokens in enumerate(request_sizes):
+        if arena.can_admit(tokens):
+            arena.admit(i, tokens)
+            admitted.append(i)
+    assert arena.pages_in_use > 0 or not admitted
+    for i in admitted:
+        arena.extend(i, 5)
+        assert arena.tables[i].used_tokens == request_sizes[i] + 5
+    for i in admitted:
+        arena.release(i)
+    assert arena.pages_in_use == 0
+    assert arena.fragmentation() == 0.0
+
+
+def test_kv_arena_growth_doubles_run():
+    arena = PagedKVArena(n_pages=64, page_tokens=16, kv_bytes_per_token=4)
+    pt = arena.admit(0, prompt_tokens=16)       # 1 page
+    assert pt.n_pages == 1
+    for _ in range(17):
+        arena.extend(0)
+    assert arena.tables[0].n_pages >= 2
+    assert arena.grows >= 1
+    arena.release(0)
+    assert arena.pages_in_use == 0

@@ -1,0 +1,52 @@
+"""Task-graph pipeline parallelism (distributed/pipeline.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Executor, place
+from repro.distributed.pipeline import (Stage, build_pipeline_graph,
+                                        pipeline_schedule_length)
+
+
+def _stages(n, d=8):
+    key = jax.random.PRNGKey(0)
+    ws = [jax.random.normal(jax.random.fold_in(key, i), (d, d)) * 0.3
+          for i in range(n)]
+    fn = jax.jit(lambda w, x: jnp.tanh(x @ w))
+    return [Stage(fn=fn, params=np.asarray(w)) for w in ws]
+
+
+def test_pipeline_output_matches_sequential():
+    stages = _stages(3)
+    mbs = [np.random.default_rng(i).normal(size=(4, 8)).astype(np.float32)
+           for i in range(5)]
+    out: list = []
+    G = build_pipeline_graph(stages, mbs, collect=out)
+    with Executor(num_workers=4) as ex:
+        ex.run(G).result(timeout=120)
+    assert len(out) == 5
+    for m, mb in enumerate(mbs):
+        want = mb
+        for st in stages:
+            want = np.tanh(want @ st.params)
+        np.testing.assert_allclose(out[m], want, rtol=1e-5, atol=1e-5)
+
+
+def test_pipeline_stage_placement():
+    """Algorithm 1 pins every kernel of a stage to its weight's bin."""
+    stages = _stages(2)
+    mbs = [np.zeros((2, 8), np.float32) for _ in range(3)]
+    G = build_pipeline_graph(stages, mbs)
+    pl = place(G, ["dev0", "dev1"])
+    by_stage = {}
+    for n in G.nodes:
+        if n.name.startswith("f["):
+            s = int(n.name[2])
+            by_stage.setdefault(s, set()).add(pl[n.id])
+    # each stage entirely on one bin, stages on different bins
+    assert all(len(v) == 1 for v in by_stage.values())
+    assert by_stage[0] != by_stage[1]
+
+
+def test_schedule_length_formula():
+    assert pipeline_schedule_length(4, 8) == 11

@@ -1,0 +1,74 @@
+"""Algorithm 1 (union-find + balanced bin packing) properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Heteroflow, UnionFind, place
+from repro.core.graph import TaskType
+
+
+def test_union_find_basics():
+    uf = UnionFind()
+    uf.union(1, 2)
+    uf.union(2, 3)
+    assert uf.same(1, 3)
+    assert not uf.same(1, 4)
+
+
+def test_kernel_groups_with_source_pulls():
+    G = Heteroflow()
+    p1, p2 = G.pull(np.zeros(4)), G.pull(np.zeros(4))
+    k = G.kernel(lambda a, b: a, p1, p2)
+    pl = place(G, ["d0", "d1", "d2"])
+    assert pl[p1._node.id] == pl[p2._node.id] == pl[k._node.id]
+
+
+def test_transitive_grouping():
+    """kernels sharing a pull chain into one group (paper Fig. 3)."""
+    G = Heteroflow()
+    p1, p2 = G.pull(np.zeros(4)), G.pull(np.zeros(4))
+    k1 = G.kernel(lambda a: a, p1)
+    k2 = G.kernel(lambda a, b: a, p1, p2)
+    pl = place(G, ["d0", "d1"])
+    ids = {pl[n._node.id] for n in (p1, p2, k1, k2)}
+    assert len(ids) == 1
+
+
+def test_independent_groups_balanced():
+    G = Heteroflow()
+    kernels = []
+    for i in range(8):
+        p = G.pull(np.zeros(64))
+        kernels.append(G.kernel(lambda a: a, p))
+    pl = place(G, ["d0", "d1"])
+    counts = {}
+    for k in kernels:
+        counts[pl[k._node.id]] = counts.get(pl[k._node.id], 0) + 1
+    assert counts["d0"] == counts["d1"] == 4
+
+
+def test_pinned_sharding_respected():
+    G = Heteroflow()
+    p = G.pull(np.zeros(4), sharding="d1")
+    k = G.kernel(lambda a: a, p)
+    pl = place(G, ["d0", "d1"])
+    assert pl[p._node.id] == "d1" and pl[k._node.id] == "d1"
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 30), st.randoms())
+def test_placement_total_and_affinity(n_bins, n_kernels, rng):
+    """Every device task is placed; kernels always co-locate with their
+    pulls; max/min load differs by at most one group's cost (unit costs)."""
+    G = Heteroflow()
+    ks = []
+    for i in range(n_kernels):
+        p = G.pull(np.zeros(8))
+        ks.append((p, G.kernel(lambda a: a, p, cost=1.0)))
+    bins = [f"d{i}" for i in range(n_bins)]
+    pl = place(G, bins)
+    for p, k in ks:
+        assert pl[p._node.id] == pl[k._node.id]
+    loads = {b: 0 for b in bins}
+    for _, k in ks:
+        loads[pl[k._node.id]] += 1
+    assert max(loads.values()) - min(loads.values()) <= 1

@@ -1,0 +1,100 @@
+"""Sharding rules: divisibility guards, spec structure, hypothesis fuzz."""
+import types
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.distributed import sharding as sh
+from repro.models import transformer
+
+
+def fake_mesh(data=16, model=16, pod=None):
+    shape = (data, model) if pod is None else (pod, data, model)
+    names = ("data", "model") if pod is None else ("pod", "data", "model")
+    return types.SimpleNamespace(axis_names=names,
+                                 devices=np.zeros(shape))
+
+
+def _check_divisible(spec_tree, like_tree, mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    flat_s = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    flat_l = jax.tree.leaves(like_tree)
+    assert len(flat_s) == len(flat_l)
+    for spec, leaf in zip(flat_s, flat_l):
+        for i, entry in enumerate(spec):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            total = int(np.prod([sizes[n] for n in names]))
+            assert leaf.shape[i] % total == 0, (spec, leaf.shape)
+
+
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "deepseek-v2-236b",
+                                  "recurrentgemma-2b", "xlstm-1.3b",
+                                  "minicpm-2b"])
+def test_param_specs_always_divisible(arch):
+    cfg = get_config(arch)
+    like = transformer.param_specs(cfg)
+    mesh = fake_mesh()
+    specs = sh.param_pspecs(cfg, like, mesh)
+    _check_divisible(specs, like, mesh)
+
+
+def test_kv_replication_when_few_heads():
+    """mistral kv=8 < model=16 → wk/wv replicate their head dim."""
+    cfg = get_config("mistral-large-123b")
+    like = transformer.param_specs(cfg)
+    mesh = fake_mesh()
+    specs = sh.param_pspecs(cfg, like, mesh)
+    wk_spec = specs["groups"][0]["sub0"]["mixer"]["wk"]
+    assert wk_spec[-1] is None            # replicated, not 'model'
+    wq_spec = specs["groups"][0]["sub0"]["mixer"]["wq"]
+    assert wq_spec[-1] == "model"
+
+
+def test_vocab_padding_guard():
+    """minicpm vocab 122753 is indivisible by 16 → embed vocab dim must
+    not be sharded."""
+    cfg = get_config("minicpm-2b")
+    like = transformer.param_specs(cfg)
+    specs = sh.param_pspecs(cfg, like, fake_mesh())
+    assert specs["embed"][0] is None
+
+
+def test_batch_specs_replicate_batch_one():
+    cfg = get_config("recurrentgemma-2b")
+    mesh = fake_mesh(pod=2)
+    like = {"token": jax.ShapeDtypeStruct((1,), np.int32)}
+    specs = sh.batch_pspecs(cfg, SHAPES["long_500k"], mesh, like)
+    assert specs["token"] == P(None)
+
+
+def test_state_specs_mirror_params():
+    cfg = get_config("phi3-mini-3.8b")
+    from repro.training import trainer
+    like = trainer.train_state_specs(cfg)
+    mesh = fake_mesh()
+    specs = sh.state_pspecs(cfg, like, mesh)
+    assert specs["opt"]["step"] == P()
+    p_flat = jax.tree.leaves(specs["params"],
+                             is_leaf=lambda x: isinstance(x, P))
+    m_flat = jax.tree.leaves(specs["opt"]["m"],
+                             is_leaf=lambda x: isinstance(x, P))
+    assert p_flat == m_flat               # ZeRO: moments share param layout
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from(["mistral-large-123b", "deepseek-v2-236b",
+                        "xlstm-1.3b", "qwen2-vl-7b"]),
+       st.sampled_from([(8, 8), (16, 16), (4, 2)]),
+       st.booleans())
+def test_cache_specs_divisible_fuzz(arch, mesh_shape, multi_pod):
+    cfg = get_config(arch)
+    mesh = fake_mesh(*mesh_shape, pod=2 if multi_pod else None)
+    like = transformer.cache_specs(cfg, batch=128, max_len=4096)
+    specs = sh.cache_pspecs(cfg, like, mesh)
+    _check_divisible(specs, like, mesh)
