@@ -10,6 +10,20 @@
   host(partition) → kernel(bipartite matching)`` with a dependency into
   the next iteration — irregular and dependent, the workload where the
   paper observes saturation (~20 cores, 1 GPU sufficient).
+
+Synthetic **scheduler-study shapes** (consumed by
+``benchmarks/sched_bench.py`` and ``tests/test_sched.py``; estee-style):
+
+* :func:`build_chain`      — serial pipeline, zero exploitable parallelism;
+* :func:`build_fanout`     — one root, W independent heterogeneous branches;
+* :func:`build_diamond`    — fork/join: root → W branches → join kernel;
+* :func:`build_random_dag` — seeded layered random DAG, executable end to
+  end (each sink pushes into a host buffer, so results can be compared
+  across placement policies).
+
+All four give every kernel its *own* pull task so Algorithm 1's affinity
+phase yields one group per kernel — the policy under study, not the
+grouping, decides the placement.
 """
 from __future__ import annotations
 
@@ -109,3 +123,88 @@ def build_detailed_placement(n_iters: int, n_cells: int = 256):
             prev_tail.precede(mis)        # iteration dependency
         prev_tail = sink
     return G, objective
+
+
+# ----------------------------------------------------------------------
+# scheduler-study shapes (simulator + executor stress workloads)
+# ----------------------------------------------------------------------
+def _stage_kernel(G, name, cost, nbytes, *dep_kernels, rng=None):
+    """One kernel with its own pull (own affinity group); consumes the
+    device outputs of ``dep_kernels`` plus its pulled array."""
+    data = (rng.normal(size=nbytes // 8) if rng is not None
+            else np.full(nbytes // 8, 1.0)).astype(np.float64)
+    p = G.pull(data, name=f"pull_{name}")
+    fn = lambda own, *deps: sum(deps, 0.0 * own[0]) + float(np.asarray(own).sum())  # noqa: E731
+    k = G.kernel(fn, p, *dep_kernels, cost=cost, name=name)
+    k.succeed(p)
+    for d in dep_kernels:
+        k.succeed(d)
+    return k
+
+
+def build_chain(n: int = 8, cost: float = 100.0, nbytes: int = 1024):
+    """Serial pipeline k0 → k1 → … → k{n-1}; no parallelism to exploit,
+    so transfer avoidance is the only lever a policy has."""
+    G = Heteroflow("chain")
+    prev = None
+    for i in range(n):
+        prev = _stage_kernel(G, f"k{i}", cost, nbytes,
+                             *([prev] if prev is not None else []))
+    return G
+
+
+def build_fanout(width: int = 8, root_cost: float = 50.0,
+                 branch_cost: float = 100.0, nbytes: int = 1024):
+    """Root kernel fanning out to ``width`` independent branches whose
+    costs grow linearly (c, 2c, …) — heterogeneous load, the shape where
+    list scheduling visibly beats random assignment."""
+    G = Heteroflow("fanout")
+    root = _stage_kernel(G, "root", root_cost, nbytes)
+    for i in range(width):
+        _stage_kernel(G, f"branch{i}", branch_cost * (i + 1), nbytes, root)
+    return G
+
+
+def build_diamond(width: int = 6, cost: float = 100.0, nbytes: int = 1024):
+    """Fork-join: root → ``width`` heterogeneous branches → join kernel.
+    The join makes the slowest branch the critical path."""
+    G = Heteroflow("diamond")
+    root = _stage_kernel(G, "root", cost / 2, nbytes)
+    branches = [_stage_kernel(G, f"mid{i}", cost * (i + 1), nbytes, root)
+                for i in range(width)]
+    _stage_kernel(G, "join", cost / 2, nbytes, *branches)
+    return G
+
+
+def build_random_dag(n_kernels: int = 64, seed: int = 0, fan_in: int = 3,
+                     nbytes: int = 512, with_pushes: bool = True):
+    """Seeded layered random DAG of ``n_kernels`` kernels.
+
+    Each kernel depends on up to ``fan_in`` uniformly chosen earlier
+    kernels and carries a random cost in [50, 500).  Sink kernels push a
+    scalar result into ``outputs`` (a host float64 array), so two runs —
+    under *any* two placement policies — must produce identical outputs;
+    the executor stress test asserts exactly that.
+    """
+    rng = np.random.default_rng(seed)
+    G = Heteroflow(f"random_dag_{seed}")
+    kernels = []
+    for i in range(n_kernels):
+        n_deps = int(rng.integers(0, min(fan_in, len(kernels)) + 1))
+        dep_idx = sorted(rng.choice(len(kernels), size=n_deps, replace=False)
+                         ) if n_deps else []
+        deps = [kernels[j] for j in dep_idx]
+        cost = float(rng.integers(50, 500))
+        kernels.append(_stage_kernel(G, f"k{i}", cost, nbytes, *deps, rng=rng))
+    if not with_pushes:
+        return G, None
+    sinks = [k for k in kernels if k.num_successors == 0]
+    outputs = np.zeros(len(sinks), np.float64)
+    for s_i, k in enumerate(sinks):
+        # route the kernel's scalar through a pull re-bound by a host
+        # capture: pushes only read PullTask buffers, so collect via host
+        h = G.host(lambda k=k, s_i=s_i: outputs.__setitem__(
+            s_i, float(np.asarray(k._node.state["result"]))),
+            name=f"collect{s_i}")
+        h.succeed(k)
+    return G, outputs

@@ -4,7 +4,8 @@ A flattened iterative graph (MIS kernel → sequential partition host task
 → matching kernel per iteration, chained across iterations) — the
 irregular, dependent workload where the paper observes saturation.
 
-    PYTHONPATH=src python examples/detailed_placement.py --iters 8
+    PYTHONPATH=src python examples/detailed_placement.py --iters 8 \
+        --policy round_robin
 """
 import argparse
 import os
@@ -15,7 +16,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.workloads import build_detailed_placement
+from repro.configs import DEFAULT_SCHED
 from repro.core import Executor
+from repro.sched import available_policies, simulate
 
 
 def main():
@@ -23,15 +26,23 @@ def main():
     p.add_argument("--iters", type=int, default=8)
     p.add_argument("--cells", type=int, default=256)
     p.add_argument("--workers", type=int, default=4)
+    p.add_argument("--policy", default=DEFAULT_SCHED.policy,
+                   choices=available_policies(),
+                   help="placement policy (repro.sched registry)")
     args = p.parse_args()
 
     G, objective = build_detailed_placement(args.iters, args.cells)
     print(f"graph: {len(G)} tasks for {args.iters} iterations")
     t0 = time.perf_counter()
-    with Executor(num_workers=args.workers) as ex:
+    with Executor(num_workers=args.workers, scheduler=args.policy) as ex:
+        # score the executor's own scheduler instance: the placement
+        # simulated is the one ex.run() recomputes identically below
+        sim = simulate(G, ex.scheduler.schedule(G, ex.devices),
+                       ex.devices, host_workers=args.workers)
         ex.run(G).result(timeout=600)
     dt = time.perf_counter() - t0
-    print(f"{args.iters} iterations in {dt:.2f}s; "
+    print(f"{args.iters} iterations policy={args.policy} in {dt:.2f}s; "
+          f"simulated {sim.summary()}; "
           f"objective trace: {[round(o, 1) for o in objective[:8]]}")
 
 

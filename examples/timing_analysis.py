@@ -5,7 +5,8 @@ logistic-regression kernel → push), scheduled by the work-stealing
 executor with Algorithm-1 placement — reproduces the scaling *structure*
 of paper Fig. 6 on CPU.
 
-    PYTHONPATH=src python examples/timing_analysis.py --views 32 --workers 4
+    PYTHONPATH=src python examples/timing_analysis.py --views 32 --workers 4 \
+        --policy heft
 """
 import argparse
 import os
@@ -16,13 +17,18 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.workloads import build_timing_analysis
+from repro.configs import DEFAULT_SCHED
 from repro.core import Executor
+from repro.sched import available_policies, simulate
 
 
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--views", type=int, default=16)
     p.add_argument("--workers", type=int, default=4)
+    p.add_argument("--policy", default=DEFAULT_SCHED.policy,
+                   choices=available_policies(),
+                   help="placement policy (repro.sched registry)")
     p.add_argument("--sweep", action="store_true",
                    help="sweep worker counts like paper Fig. 6")
     args = p.parse_args()
@@ -31,12 +37,17 @@ def main():
     for w in workers:
         G, outs = build_timing_analysis(args.views)
         t0 = time.perf_counter()
-        with Executor(num_workers=w) as ex:
+        with Executor(num_workers=w, scheduler=args.policy) as ex:
+            # score the executor's own scheduler instance: the placement
+            # simulated is the one ex.run() recomputes identically below
+            sim = simulate(G, ex.scheduler.schedule(G, ex.devices),
+                           ex.devices, host_workers=w)
             ex.run(G).result(timeout=600)
         dt = time.perf_counter() - t0
         done = sum(1 for o in outs if (o != 0).any())
-        print(f"workers={w}: {args.views} views in {dt:.2f}s "
-              f"({args.views / dt:.1f} views/s), {done} models fitted")
+        print(f"workers={w} policy={args.policy}: {args.views} views in "
+              f"{dt:.2f}s ({args.views / dt:.1f} views/s), "
+              f"{done} models fitted; simulated {sim.summary()}")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,7 @@ entry exposes the exact published shape; ``reduced(cfg)`` gives the
 smoke-test variant (same family & pattern, tiny dims).
 """
 from .base import (
+    DEFAULT_SCHED,
     LONG_CONTEXT_ARCHS,
     SHAPES,
     LayerGroup,
@@ -12,6 +13,7 @@ from .base import (
     ModelConfig,
     MoEConfig,
     RecurrentConfig,
+    SchedConfig,
     ShapeConfig,
     reduced,
 )
@@ -73,7 +75,8 @@ def skipped_cells() -> list[tuple[str, str, str]]:
 
 
 __all__ = [
-    "LONG_CONTEXT_ARCHS", "SHAPES", "LayerGroup", "MLAConfig", "ModelConfig",
-    "MoEConfig", "RecurrentConfig", "ShapeConfig", "reduced", "get_config",
-    "list_archs", "cells", "skipped_cells",
+    "DEFAULT_SCHED", "LONG_CONTEXT_ARCHS", "SHAPES", "LayerGroup",
+    "MLAConfig", "ModelConfig", "MoEConfig", "RecurrentConfig", "SchedConfig",
+    "ShapeConfig", "reduced", "get_config", "list_archs", "cells",
+    "skipped_cells",
 ]

@@ -192,6 +192,25 @@ def _ffn_params(cfg: ModelConfig, ffn: str) -> int:
 
 
 @dataclass(frozen=True)
+class SchedConfig:
+    """Task-scheduling knob consumed by ``core.Executor`` / ``repro.sched``.
+
+    ``policy`` names a registered placement policy (``balanced`` — paper
+    Algorithm 1, the default — ``heft``, ``round_robin``, ``random``);
+    the examples thread it through to ``Executor(scheduler=...)``.
+    ``device_speed`` (bin heterogeneity for simulation/HEFT; empty =
+    homogeneous) and ``host_workers`` (simulated host-pool concurrency)
+    are the defaults ``benchmarks/sched_bench.py`` starts from.
+    """
+    policy: str = "balanced"
+    host_workers: int = 4
+    device_speed: tuple[float, ...] = ()
+
+
+DEFAULT_SCHED = SchedConfig()
+
+
+@dataclass(frozen=True)
 class ShapeConfig:
     """One assigned input-shape cell."""
     name: str

@@ -36,7 +36,7 @@ import numpy as np
 
 from .graph import Heteroflow, KernelTask, Node, PullTask, TaskType, _span_view
 from .memory import DeviceArena
-from .placement import estimate_node_cost, place
+from .placement import estimate_node_cost
 from .streams import DispatchLane, LaneRegistry, ScopedDeviceContext
 
 __all__ = ["Executor", "Topology"]
@@ -102,6 +102,10 @@ class Executor:
         shardings, or sub-mesh objects (default: ``jax.devices()``).
     arena_bytes: if set, a buddy :class:`DeviceArena` of this capacity is
         created per device bin (paper's per-GPU memory pool).
+    scheduler: placement policy — a ``repro.sched.Scheduler`` instance or
+        a registry name (``"balanced"`` — the paper's Algorithm 1 and the
+        default — ``"heft"``, ``"round_robin"``, ``"random"``).  Policies
+        decide locality only; graph semantics are identical under any.
     """
 
     def __init__(
@@ -111,7 +115,9 @@ class Executor:
         *,
         arena_bytes: int | None = None,
         cost_fn: Callable[[Node], float] = estimate_node_cost,
+        scheduler: Any = "balanced",
     ):
+        from ..sched import get_scheduler  # lazy: sched imports core
         if num_workers is None:
             import os
             num_workers = os.cpu_count() or 1
@@ -121,6 +127,7 @@ class Executor:
         if not self.devices:
             raise ValueError("need at least one device bin")
         self._cost_fn = cost_fn
+        self.scheduler = get_scheduler(scheduler)
         self.lanes = LaneRegistry()
         self.arenas = (
             {id(d): DeviceArena(d, arena_bytes) for d in self.devices}
@@ -177,10 +184,12 @@ class Executor:
         if graph.empty():
             topo.future.set_result(0)
             return topo.future
-        # Algorithm 1: device placement before execution
+        # device placement before execution (Algorithm 1 by default; any
+        # repro.sched policy via the ``scheduler`` constructor knob)
         initial = {d: a.bytes_in_use for d, a in
                    ((dd, self.arenas.get(id(dd))) for dd in self.devices) if a}
-        place(graph, self.devices, self._cost_fn, initial_load=initial or None)
+        self.scheduler.schedule(graph, self.devices, self._cost_fn,
+                                initial_load=initial or None)
         with self._topo_cv:
             self._topologies.add(topo.id)
         sources = topo._arm()
@@ -212,6 +221,7 @@ class Executor:
         return {
             "workers": self.num_workers,
             "devices": len(self.devices),
+            "policy": self.scheduler.name,
             "steals": sum(w.steals for w in self._workers),
             "executed": sum(w.executed for w in self._workers),
             "lane_depths": {i: l.depth() for i, l in enumerate(self.lanes.lanes())},

@@ -4,7 +4,12 @@ Each kernel task is unioned with its source pull tasks (implicit data
 affinity harvested by ``Heteroflow.kernel``); every resulting group is then
 packed onto the device bin with minimal load.  The default cost minimizes
 load per bin ("balanced load ... for maximal concurrency"); the cost metric
-is pluggable exactly as the paper proposes.
+is pluggable exactly as the paper proposes — and since the ``repro.sched``
+subsystem landed, the *policy* is pluggable too: ``place()`` below is a
+thin wrapper fixing the policy to the paper's balanced bin packing
+(``repro.sched.BalancedBins``); alternative strategies (HEFT, round-robin,
+random) and a discrete-event simulator to score them live in
+``repro.sched`` (see docs/scheduling.md).
 
 On TPU the bins are devices *or sub-meshes* — at pod scale a "device" for a
 pjit'd kernel is the mesh slice it runs on (DESIGN.md §2, scale adaptation).
@@ -87,63 +92,15 @@ def place(
 ) -> dict[int, Any]:
     """Paper Algorithm 1: returns ``{node.id: bin}`` for device tasks.
 
-    1. union every KERNEL with its source PULL tasks (lines 1–7);
-    2. for each unique group root, pick the bin with the least accumulated
-       load and assign the whole group (lines 8–14,
-       ``set_bin_packing_with_balanced_load``).
-
-    Pull tasks with an explicit ``sharding`` pin are respected: their group
-    is forced onto the pinned bin (the paper lets users bypass the
-    scheduler the same way by constructing per-device graphs).
+    Back-compat wrapper over the pluggable scheduling subsystem: the
+    union-find affinity phase lives in ``repro.sched.base.build_groups``
+    and the balanced-load bin packing in
+    :class:`repro.sched.policies.BalancedBins` (bit-identical decisions —
+    same LPT order, same lowest-index tie-breaking, same pin handling).
+    Prefer ``repro.sched.get_scheduler(policy).schedule(...)`` in new
+    code; this entry point pins the policy to the paper's.
     """
-    if not bins:
-        raise ValueError("no device bins to place onto")
-    uf = UnionFind()
-    nodes = graph.nodes
+    from ..sched import BalancedBins  # lazy: sched imports this module
 
-    # lines 1..7: group kernels with their source pull tasks
-    for t in nodes:
-        if t.type == TaskType.KERNEL:
-            for p in t.state.get("sources", ()):
-                uf.union(t.id, p.id)
-
-    # accumulate group cost & pinned bins
-    group_cost: dict[Hashable, float] = {}
-    group_pin: dict[Hashable, Any] = {}
-    device_nodes = [t for t in nodes if t.type in (TaskType.KERNEL, TaskType.PULL)]
-    for t in device_nodes:
-        r = uf.find(t.id)
-        group_cost[r] = group_cost.get(r, 0.0) + cost_fn(t)
-        pin = t.state.get("sharding")
-        if pin is not None:
-            prev = group_pin.get(r)
-            if prev is not None and prev is not pin:
-                raise ValueError(
-                    f"group containing '{t.name}' pinned to two shardings")
-            group_pin[r] = pin
-
-    # lines 8..14: balanced-load bin packing (largest group first — the
-    # classic LPT heuristic; strictly better balance than arrival order)
-    load: dict[int, float] = {i: 0.0 for i in range(len(bins))}
-    if initial_load:
-        for i, b in enumerate(bins):
-            load[i] = float(initial_load.get(b, 0.0))
-    assignment: dict[Hashable, int] = {}
-    for root, cost in sorted(group_cost.items(), key=lambda kv: -kv[1]):
-        pin = group_pin.get(root)
-        if pin is not None:
-            idx = next((i for i, b in enumerate(bins) if b is pin or b == pin), None)
-            if idx is None:
-                idx = min(load, key=load.get)  # pin not among bins: fall back
-        else:
-            idx = min(load, key=load.get)
-        assignment[root] = idx
-        load[idx] += cost
-
-    placement: dict[int, Any] = {}
-    for t in device_nodes:
-        idx = assignment[uf.find(t.id)]
-        placement[t.id] = bins[idx]
-        t.device = bins[idx]
-        t.group = uf.find(t.id)
-    return placement
+    return BalancedBins().schedule(
+        graph, bins, cost_fn, initial_load=initial_load)

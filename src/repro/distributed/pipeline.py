@@ -49,6 +49,7 @@ def build_pipeline_graph(stages: Sequence[Stage], microbatches: Sequence[Any],
         weight_pulls.append(G.pull(stage.params, name=f"weights[{s}]"))
 
     grid: list[list] = [[None] * len(microbatches) for _ in range(n_stages)]
+    prev_sink = None
     for m, mb in enumerate(microbatches):
         prev_out = G.pull(mb, name=f"mb[{m}]")
         for s, stage in enumerate(stages):
@@ -69,6 +70,11 @@ def build_pipeline_graph(stages: Sequence[Stage], microbatches: Sequence[Any],
                     np.asarray(k._node.state["result"])),
                 name=f"collect[{m}]")
             grid[n_stages - 1][m].precede(sink)
+            # chain the sinks: collect order is *microbatch* order, not
+            # work-stealing completion order
+            if prev_sink is not None:
+                prev_sink.precede(sink)
+            prev_sink = sink
     return G
 
 

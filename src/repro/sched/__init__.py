@@ -1,0 +1,35 @@
+"""repro.sched — pluggable scheduling subsystem.
+
+Splits paper Algorithm 1 into an affinity phase (kernel∪pull union-find,
+``base.build_groups``) and a pluggable placement policy (``Scheduler``),
+and adds a discrete-event simulator so policies can be scored on
+synthetic graphs without JAX devices (estee-style scheduler study).
+
+Quick use::
+
+    from repro.sched import get_scheduler, simulate
+    pl = get_scheduler("heft").schedule(graph, bins)
+    print(simulate(graph, pl, bins).summary())
+
+Policies: ``balanced`` (seed Algorithm 1), ``heft``, ``round_robin``,
+``random``.  ``Executor(scheduler="heft")`` selects one at runtime;
+``configs.SchedConfig`` is the config-file knob.  See docs/scheduling.md.
+"""
+from .base import (
+    Scheduler,
+    TaskGroup,
+    apply_assignment,
+    available_policies,
+    build_groups,
+    get_scheduler,
+    register,
+)
+from .policies import BalancedBins, Heft, RandomPolicy, RoundRobin
+from .simulator import CostModel, SimReport, simulate
+
+__all__ = [
+    "Scheduler", "TaskGroup", "build_groups", "apply_assignment",
+    "register", "get_scheduler", "available_policies",
+    "BalancedBins", "Heft", "RoundRobin", "RandomPolicy",
+    "CostModel", "SimReport", "simulate",
+]

@@ -1,0 +1,201 @@
+"""Scheduler interface — the pluggable half of paper Algorithm 1.
+
+The paper factors device placement into (a) an *affinity* phase that
+unions every kernel with its source pull tasks (data locality is not
+negotiable) and (b) a *policy* phase that maps the resulting groups onto
+device bins.  The seed hard-wired phase (b) to balanced bin packing; this
+module makes it a :class:`Scheduler` strategy so alternative policies
+(HEFT list scheduling, round-robin, random baselines — see
+``sched.policies``) can be swapped in and scored offline by
+``sched.simulator`` before they ever touch hardware, the estee-style
+workflow ("Analysis of workflow schedulers in simulated distributed
+environments").
+
+Every policy receives the same pre-digested :class:`TaskGroup` list, so
+the paper's invariants hold for all of them:
+
+* kernels are always co-placed with their source pulls (one group);
+* explicit ``sharding`` pins override the policy for the whole group;
+* placement never changes *semantics*, only locality/latency — the
+  executor will faithfully run any placement.
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Any, Callable, Hashable, Mapping, Sequence
+
+from repro.core.graph import Heteroflow, Node, TaskType
+from repro.core.placement import UnionFind, estimate_node_cost
+
+__all__ = [
+    "TaskGroup",
+    "Scheduler",
+    "build_groups",
+    "apply_assignment",
+    "bin_index",
+    "register",
+    "get_scheduler",
+    "available_policies",
+]
+
+CostFn = Callable[[Node], float]
+
+
+@dataclass
+class TaskGroup:
+    """One placement unit: a kernel∪pull affinity group (Algorithm 1 l.1-7).
+
+    ``order`` is the first-seen position over the graph's device tasks —
+    policies that need a deterministic arrival order (round-robin, stable
+    tie-breaks) use it instead of re-deriving node order.
+    """
+
+    root: Hashable
+    order: int
+    nodes: list[Node] = field(default_factory=list)
+    cost: float = 0.0
+    pin: Any | None = None
+
+
+def build_groups(graph: Heteroflow, cost_fn: CostFn = estimate_node_cost,
+                 ) -> list[TaskGroup]:
+    """Affinity phase of Algorithm 1: union kernels with their source
+    pulls, accumulate per-group cost and pins.
+
+    Returns groups in first-seen order over ``graph.nodes`` (the order the
+    seed implementation inserted them into its cost dict — preserved so
+    :class:`~repro.sched.policies.BalancedBins` reproduces the seed
+    placement byte-for-byte).
+    """
+    uf = UnionFind()
+    nodes = graph.nodes
+    for t in nodes:
+        if t.type == TaskType.KERNEL:
+            for p in t.state.get("sources", ()):
+                uf.union(t.id, p.id)
+
+    groups: dict[Hashable, TaskGroup] = {}
+    for t in nodes:
+        if t.type not in (TaskType.KERNEL, TaskType.PULL):
+            continue
+        r = uf.find(t.id)
+        g = groups.get(r)
+        if g is None:
+            g = groups[r] = TaskGroup(root=r, order=len(groups))
+        g.nodes.append(t)
+        g.cost += cost_fn(t)
+        pin = t.state.get("sharding")
+        if pin is not None:
+            if g.pin is not None and g.pin is not pin:
+                raise ValueError(
+                    f"group containing '{t.name}' pinned to two shardings")
+            g.pin = pin
+    return list(groups.values())
+
+
+def bin_index(bins: Sequence[Any], target: Any) -> int | None:
+    """Locate ``target`` among ``bins`` by identity then equality (device
+    objects may not define ``__eq__``; strings/shardings do)."""
+    for i, b in enumerate(bins):
+        if b is target or b == target:
+            return i
+    return None
+
+
+def apply_assignment(
+    graph: Heteroflow,
+    groups: Sequence[TaskGroup],
+    bins: Sequence[Any],
+    assignment: Mapping[Hashable, int],
+) -> dict[int, Any]:
+    """Write a ``{group.root: bin_index}`` decision back onto the graph
+    (``node.device`` / ``node.group``) and return the paper-shaped
+    ``{node.id: bin}`` placement map."""
+    placement: dict[int, Any] = {}
+    for g in groups:
+        b = bins[assignment[g.root]]
+        for t in g.nodes:
+            placement[t.id] = b
+            t.device = b
+            t.group = g.root
+    return placement
+
+
+class Scheduler(abc.ABC):
+    """Placement policy: ``schedule(graph, bins) -> {node.id: bin}``.
+
+    Subclasses implement :meth:`assign` over pre-built affinity groups;
+    pin handling and graph write-back are shared.  ``initial_load`` lets
+    the executor bias placement by bytes already resident per bin (arena
+    occupancy), mirroring the seed ``place()`` contract.
+    """
+
+    #: registry key; subclasses must override.
+    name: str = ""
+
+    def schedule(
+        self,
+        graph: Heteroflow,
+        bins: Sequence[Any],
+        cost_fn: CostFn = estimate_node_cost,
+        *,
+        initial_load: Mapping[Any, float] | None = None,
+    ) -> dict[int, Any]:
+        if not bins:
+            raise ValueError("no device bins to place onto")
+        groups = build_groups(graph, cost_fn)
+        assignment = self.assign(graph, groups, bins, initial_load=initial_load)
+        return apply_assignment(graph, groups, bins, assignment)
+
+    @abc.abstractmethod
+    def assign(
+        self,
+        graph: Heteroflow,
+        groups: Sequence[TaskGroup],
+        bins: Sequence[Any],
+        *,
+        initial_load: Mapping[Any, float] | None = None,
+    ) -> dict[Hashable, int]:
+        """Map each group root to a bin index.  Must honor ``group.pin``
+        when the pinned bin is present in ``bins``."""
+
+    def _pinned_index(self, g: TaskGroup, bins: Sequence[Any]) -> int | None:
+        if g.pin is None:
+            return None
+        return bin_index(bins, g.pin)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<{type(self).__name__} policy={self.name!r}>"
+
+
+# ----------------------------------------------------------------------
+# policy registry — the config knob (configs.SchedConfig.policy) resolves
+# through here, as does Executor(scheduler="heft").
+# ----------------------------------------------------------------------
+_REGISTRY: dict[str, type[Scheduler]] = {}
+
+
+def register(cls: type[Scheduler]) -> type[Scheduler]:
+    """Class decorator: add a policy to the registry under ``cls.name``."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} has no policy name")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_scheduler(policy: "Scheduler | str", **kwargs: Any) -> Scheduler:
+    """Resolve a policy name (or pass through an instance)."""
+    if isinstance(policy, Scheduler):
+        return policy
+    try:
+        cls = _REGISTRY[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduling policy {policy!r}; "
+            f"available: {sorted(_REGISTRY)}") from None
+    return cls(**kwargs)
+
+
+def available_policies() -> list[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,209 @@
+"""Placement policies over Algorithm-1 affinity groups.
+
+Four strategies, spanning the design space the paper's evaluation sweeps
+implicitly (balanced packing) and the classic alternatives from the
+list-scheduling literature (HEFT upward-rank), plus the two baselines any
+scheduler study needs (round-robin, random — estee ships the same pair):
+
+* :class:`BalancedBins` — the seed Algorithm 1 policy, bit-identical.
+* :class:`Heft`         — upward-rank critical-path list scheduling with
+  earliest-finish-time bin selection; heterogeneity-aware via
+  :class:`~repro.sched.simulator.CostModel` device speeds.
+* :class:`RoundRobin`   — groups to bins cyclically in arrival order.
+* :class:`RandomPolicy` — seeded uniform assignment.
+
+All policies honor ``sharding`` pins and keep each kernel∪pull group
+atomic, so swapping policies can change *when/where* but never *what*
+(the executor stress tests assert identical results across policies).
+"""
+from __future__ import annotations
+
+import random
+from typing import Any, Hashable, Mapping, Sequence
+
+from repro.core.graph import Heteroflow, Node, TaskType
+
+from .base import Scheduler, TaskGroup, register
+from .simulator import CostModel
+
+__all__ = ["BalancedBins", "Heft", "RoundRobin", "RandomPolicy"]
+
+
+@register
+class BalancedBins(Scheduler):
+    """Paper Algorithm 1 lines 8-14: largest-group-first (LPT) onto the
+    least-loaded bin.
+
+    Exactly reproduces the seed ``core.placement.place()`` decisions:
+    groups are sorted by descending cost with a stable sort (ties keep
+    first-seen order), and load ties resolve to the lowest bin index.
+    """
+
+    name = "balanced"
+
+    def assign(self, graph: Heteroflow, groups: Sequence[TaskGroup],
+               bins: Sequence[Any], *,
+               initial_load: Mapping[Any, float] | None = None,
+               ) -> dict[Hashable, int]:
+        load: dict[int, float] = {i: 0.0 for i in range(len(bins))}
+        if initial_load:
+            for i, b in enumerate(bins):
+                load[i] = float(initial_load.get(b, 0.0))
+        assignment: dict[Hashable, int] = {}
+        for g in sorted(groups, key=lambda g: -g.cost):
+            idx = self._pinned_index(g, bins)
+            if idx is None:
+                idx = min(load, key=load.get)
+            assignment[g.root] = idx
+            load[idx] += g.cost
+        return assignment
+
+
+@register
+class RoundRobin(Scheduler):
+    """Groups to bins cyclically in first-seen order; pins don't advance
+    the cursor (a pinned group was never the policy's choice)."""
+
+    name = "round_robin"
+
+    def assign(self, graph: Heteroflow, groups: Sequence[TaskGroup],
+               bins: Sequence[Any], *,
+               initial_load: Mapping[Any, float] | None = None,
+               ) -> dict[Hashable, int]:
+        assignment: dict[Hashable, int] = {}
+        cursor = 0
+        for g in sorted(groups, key=lambda g: g.order):
+            idx = self._pinned_index(g, bins)
+            if idx is None:
+                idx = cursor % len(bins)
+                cursor += 1
+            assignment[g.root] = idx
+        return assignment
+
+
+@register
+class RandomPolicy(Scheduler):
+    """Seeded uniform assignment — the floor any real policy must beat."""
+
+    name = "random"
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+
+    def assign(self, graph: Heteroflow, groups: Sequence[TaskGroup],
+               bins: Sequence[Any], *,
+               initial_load: Mapping[Any, float] | None = None,
+               ) -> dict[Hashable, int]:
+        rng = random.Random(self.seed)
+        assignment: dict[Hashable, int] = {}
+        for g in sorted(groups, key=lambda g: g.order):
+            idx = self._pinned_index(g, bins)
+            if idx is None:
+                idx = rng.randrange(len(bins))
+            assignment[g.root] = idx
+        return assignment
+
+
+@register
+class Heft(Scheduler):
+    """Heterogeneous-Earliest-Finish-Time list scheduling at group
+    granularity (Topcuoglu et al., the policy the Taskflow line of work
+    benchmarks against).
+
+    1. *Upward rank* per node: mean execution time plus the maximum over
+       successors of (cross-group transfer time + successor rank) — the
+       critical-path-to-exit estimate.
+    2. Groups are processed in decreasing rank (rank of a group = max
+       rank of its member nodes; ties break on arrival order).
+    3. Each group goes to the bin minimizing its earliest finish time,
+       accounting for per-bin speed, bin availability, and transfer cost
+       from already-placed cross-group predecessors.
+
+    The same :class:`CostModel` drives the simulator, so HEFT optimizes
+    the metric ``sched.simulator.simulate`` measures.
+    """
+
+    name = "heft"
+
+    def __init__(self, cost_model: CostModel | None = None):
+        self.cost_model = cost_model or CostModel()
+
+    def assign(self, graph: Heteroflow, groups: Sequence[TaskGroup],
+               bins: Sequence[Any], *,
+               initial_load: Mapping[Any, float] | None = None,
+               ) -> dict[Hashable, int]:
+        model = self.cost_model
+        n_bins = len(bins)
+        mean_speed = (sum(model.speed(i) for i in range(n_bins)) / n_bins
+                      ) or 1.0
+
+        group_of: dict[int, Hashable] = {}
+        for g in groups:
+            for t in g.nodes:
+                group_of[t.id] = g.root
+
+        # -- upward ranks over the full node graph (host tasks included:
+        # they sit on critical paths between kernels) -------------------
+        order = graph.topological_order()
+        if order is None:
+            raise ValueError(f"graph '{graph.name}' contains a cycle")
+        rank: dict[int, float] = {}
+        for n in reversed(order):
+            w = model.node_time(n, speed=mean_speed)
+            best = 0.0
+            for s in n.successors:
+                comm = 0.0
+                gn, gs = group_of.get(n.id), group_of.get(s.id)
+                if gn is not None and gs is not None and gn != gs:
+                    comm = model.transfer_time(model.out_bytes(n))
+                best = max(best, comm + rank[s.id])
+            rank[n.id] = w + best
+
+        group_rank = {g.root: max(rank[t.id] for t in g.nodes) for g in groups}
+        # cross-group predecessor map (for EFT data-ready times)
+        preds: dict[Hashable, set[tuple[Hashable, int]]] = {g.root: set()
+                                                            for g in groups}
+        for g in groups:
+            for t in g.nodes:
+                for d in t.dependents:
+                    gd = group_of.get(d.id)
+                    if gd is not None and gd != g.root:
+                        preds[g.root].add((gd, model.out_bytes(d)))
+
+        free = [0.0] * n_bins
+        finish: dict[Hashable, float] = {}
+        placed: dict[Hashable, int] = {}
+        assignment: dict[Hashable, int] = {}
+        for g in sorted(groups, key=lambda g: (-group_rank[g.root], g.order)):
+            pinned = self._pinned_index(g, bins)
+            best_idx, best_eft = 0, float("inf")
+            candidates = range(n_bins) if pinned is None else (pinned,)
+            for i in candidates:
+                ready = free[i]
+                for (pg, nbytes) in preds[g.root]:
+                    if pg not in placed:
+                        continue  # predecessor group not yet ranked-ahead
+                    t_avail = finish[pg]
+                    if placed[pg] != i:
+                        t_avail += model.transfer_time(nbytes)
+                    ready = max(ready, t_avail)
+                # node_time scales only kernels by speed — the same rule
+                # the simulator charges, so EFT optimizes what it measures
+                exec_cost = sum(model.node_time(t, speed=model.speed(i))
+                                for t in g.nodes)
+                eft = ready + exec_cost
+                if eft < best_eft:
+                    best_idx, best_eft = i, eft
+            assignment[g.root] = best_idx
+            placed[g.root] = best_idx
+            finish[g.root] = best_eft
+            free[best_idx] = best_eft
+        return assignment
+
+
+def gather_sources(node: Node) -> list[Node]:
+    """Source pull tasks of a kernel (paper Listing 8 line 3) — exposed
+    for tests and external policies."""
+    if node.type != TaskType.KERNEL:
+        return []
+    return list(node.state.get("sources", ()))

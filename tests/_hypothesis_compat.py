@@ -1,0 +1,112 @@
+"""Hypothesis compatibility shim for optional-dependency test runs.
+
+The property tests (`test_memory`, `test_placement`, `test_sharding`)
+were written against hypothesis, which is *not* baked into every runtime
+image.  When hypothesis is importable this module re-exports the real
+``given`` / ``settings`` / ``st`` unchanged; when it is absent the tests
+degrade to **fixed-seed sampled checks**: ``@given`` draws
+``max_examples`` inputs from a deterministic PRNG per strategy and runs
+the test body once per draw.  Weaker than real shrinking-and-search, but
+the same invariants execute on the same input shapes, and a failure
+reproduces bit-identically run to run.
+
+Only the strategy surface the repo's tests use is implemented:
+``integers``, ``booleans``, ``lists``, ``tuples``, ``sampled_from``,
+``randoms``.  Extend it here when a new test needs more.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_MAX_EXAMPLES = 25
+    _SEED = 0xA11CE
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        """Deterministic stand-ins for ``hypothesis.strategies``."""
+
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda r: r.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            pool = list(elements)
+            return _Strategy(lambda r: pool[r.randrange(len(pool))])
+
+        @staticmethod
+        def tuples(*strats: _Strategy) -> _Strategy:
+            return _Strategy(lambda r: tuple(s.example(r) for s in strats))
+
+        @staticmethod
+        def lists(elements: _Strategy, *, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            def draw(r):
+                n = r.randint(min_size, max_size)
+                return [elements.example(r) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def randoms() -> _Strategy:
+            return _Strategy(lambda r: random.Random(r.getrandbits(64)))
+
+    st = _Strategies()
+
+    def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Accepts (and mostly ignores) the hypothesis settings surface;
+        only ``max_examples`` is honored by the shim's ``given``."""
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats: _Strategy):
+        def deco(fn):
+            # hypothesis maps positional strategies onto the test's LAST
+            # parameters; bind by keyword so leading pytest fixtures keep
+            # working exactly as they would under real hypothesis
+            params = list(inspect.signature(fn).parameters.values())
+            drawn_names = [p.name for p in params[-len(strats):]]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                for i in range(n):
+                    rng = random.Random(_SEED + 7919 * i)
+                    drawn = {name: s.example(rng)
+                             for name, s in zip(drawn_names, strats)}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except BaseException as e:  # noqa: BLE001 - annotate & re-raise
+                        e.args = (f"[hypothesis-shim example {i}: "
+                                  f"{drawn!r}] " + (str(e.args[0]) if e.args
+                                                    else ""),) + e.args[1:]
+                        raise
+                return None
+            # the drawn parameters are supplied by the shim, not by pytest
+            # fixtures: hide them from collection
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature(
+                params[:-len(strats)])
+            return wrapper
+        return deco

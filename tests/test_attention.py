@@ -78,6 +78,7 @@ def test_decode_fast_path_matches_last_row():
     np.testing.assert_allclose(one[:, 0], full[:, -1], rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "recurrentgemma-2b",
                                   "deepseek-v2-236b", "xlstm-1.3b"])
 def test_prefill_decode_consistency(arch):
@@ -105,6 +106,7 @@ def test_prefill_decode_consistency(arch):
     np.testing.assert_allclose(ld, logits_full[:, -1], **tol)
 
 
+@pytest.mark.slow
 def test_ring_cache_local_attention_window():
     """Ring-buffer cache (local attention) matches windowed attention even
     after the ring wraps."""

@@ -1,6 +1,7 @@
 """Buddy allocator (paper §III-C) — unit + hypothesis property tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import BuddyAllocator, OutOfMemory
 from repro.serving import PagedKVArena

@@ -57,6 +57,7 @@ def test_train_step_loss_finite(rigs, arch):
         cfg.vocab_size)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_decode_step(rigs, arch):
     cfg, params = rigs[arch]
@@ -87,6 +88,7 @@ def test_param_count_close_to_published(rigs, arch):
     assert published[arch] / 2 < n < published[arch] * 2.1, n
 
 
+@pytest.mark.slow
 def test_grad_flows_through_every_param():
     """No dead parameters: every leaf receives a nonzero gradient
     somewhere in a mixed-family config."""

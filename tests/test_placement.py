@@ -1,6 +1,7 @@
 """Algorithm 1 (union-find + balanced bin packing) properties."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import Heteroflow, UnionFind, place
 from repro.core.graph import TaskType

@@ -16,6 +16,7 @@ def rig():
     return cfg, params
 
 
+@pytest.mark.slow
 def test_engine_completes_all_requests(rig):
     cfg, params = rig
     eng = ServingEngine(cfg, params, max_slots=2, max_seq=64)
@@ -46,6 +47,7 @@ def test_engine_rejects_oversize(rig):
     assert len(done) == 1 and done[0].generated == []
 
 
+@pytest.mark.slow
 def test_engine_under_hetflow_executor(rig):
     cfg, params = rig
     with Executor(num_workers=2) as ex:
@@ -57,6 +59,7 @@ def test_engine_under_hetflow_executor(rig):
     assert len(done) == 3
 
 
+@pytest.mark.slow
 def test_engine_matches_raw_decode(rig):
     """Engine generation == direct prefill+decode of the model."""
     from repro.models import decode_step, init_cache, prefill

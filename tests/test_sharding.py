@@ -4,8 +4,9 @@ import types
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
+
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import SHAPES, get_config
 from repro.distributed import sharding as sh

@@ -8,6 +8,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config, reduced
 from repro.core import Executor, Heteroflow
@@ -17,6 +18,7 @@ from repro.training import (AdamWConfig, checkpoint, init_train_state,
                             make_train_step, wsd_schedule)
 
 
+@pytest.mark.slow
 def test_hetflow_training_loop_end_to_end():
     """host(data) → pull(batch) → kernel(train_step) → push(metrics),
     repeated via run_until — loss decreases on a repeated batch."""
@@ -55,6 +57,7 @@ def test_hetflow_training_loop_end_to_end():
     assert losses[-1] < losses[0] - 0.3, losses
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_resumes_training():
     """Fault tolerance: kill after step k, restore, continue — the
     restored run produces identical parameters to an uninterrupted one."""

@@ -32,6 +32,7 @@ def test_cosine_schedule_monotone_decay():
     assert float(lr[55]) == pytest.approx(0.1, rel=1e-3)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("accum", [1, 2])
 def test_memorization_drives_loss_down(accum):
     cfg = reduced(get_config("phi3-mini-3.8b"))
@@ -50,6 +51,7 @@ def test_memorization_drives_loss_down(accum):
     assert float(m["grad_norm"]) > 0
 
 
+@pytest.mark.slow
 def test_grad_clipping_bounds_update():
     cfg = reduced(get_config("phi3-mini-3.8b"))
     state = init_train_state(cfg, jax.random.PRNGKey(0))
