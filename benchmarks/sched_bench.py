@@ -14,10 +14,19 @@ lucky seed is not a baseline).  The trailing ``check`` rows assert the
 paper-level sanity condition: HEFT's critical-path scheduling beats the
 random baseline on the shapes with real placement freedom
 (fan-out / diamond).
+
+CI perf-regression gate (the simulator is deterministic, so drift means
+a code change — see docs/scheduling.md for the baseline-refresh
+procedure)::
+
+    python benchmarks/sched_bench.py --json BENCH_sched.json --check-baseline
+    python benchmarks/sched_bench.py --write-baseline \
+        benchmarks/baselines/sched_baseline.json   # refresh after review
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -41,6 +50,13 @@ SHAPES = {
                                            with_pushes=False)[0],
 }
 POLICIES = ("balanced", "heft", "round_robin", "random")
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                                "sched_baseline.json")
+#: policy the CI gate watches; regressions elsewhere are advisory CSV rows
+GATED_POLICY = "heft"
+#: relative makespan increase that fails the gate
+REGRESSION_RTOL = 0.10
 
 
 def score(policy_name: str, shape: str, bins: list[str], model: CostModel,
@@ -69,7 +85,62 @@ def score(policy_name: str, shape: str, bins: list[str], model: CostModel,
     return rep.makespan, rep.utilization
 
 
-def main() -> None:
+def results_payload(args, results: dict[tuple[str, str], float],
+                    utils: dict[tuple[str, str], float]) -> dict:
+    """Machine-readable sweep outcome (the --json artifact / baseline)."""
+    makespan_s: dict[str, dict[str, float]] = {}
+    mean_util: dict[str, dict[str, float]] = {}
+    for (shape, pol), ms in results.items():
+        makespan_s.setdefault(shape, {})[pol] = ms
+        mean_util.setdefault(shape, {})[pol] = utils[(shape, pol)]
+    return {
+        "version": 1,
+        "bins": args.bins,
+        "speeds": list(args.parsed_speeds),
+        "host_workers": args.host_workers,
+        "random_seeds": args.random_seeds,
+        "makespan_s": makespan_s,
+        "mean_util": mean_util,
+    }
+
+
+def check_baseline(payload: dict, baseline: dict, *,
+                   policy: str = GATED_POLICY,
+                   rtol: float = REGRESSION_RTOL) -> list[str]:
+    """Compare ``policy``'s simulated makespans against a baseline.
+
+    Returns a list of human-readable failures (empty = gate passes):
+    per-shape regressions beyond ``rtol``, plus configuration mismatches
+    that would make the comparison meaningless.
+    """
+    failures: list[str] = []
+    for knob in ("bins", "speeds", "host_workers"):
+        if baseline.get(knob) != payload.get(knob):
+            failures.append(
+                f"config mismatch on {knob!r}: baseline "
+                f"{baseline.get(knob)!r} vs run {payload.get(knob)!r} "
+                f"(re-run with matching flags or refresh the baseline)")
+    base_ms = baseline.get("makespan_s", {})
+    cur_ms = payload.get("makespan_s", {})
+    for shape, policies in sorted(base_ms.items()):
+        if policy not in policies:
+            continue
+        base = policies[policy]
+        cur = cur_ms.get(shape, {}).get(policy)
+        if cur is None:
+            failures.append(f"{shape}: no {policy} result in this run "
+                            f"(baseline has {base:.6g}s)")
+            continue
+        if cur > base * (1.0 + rtol):
+            failures.append(
+                f"{shape}: {policy} makespan regressed "
+                f"{cur * 1e3:.4f}ms vs baseline {base * 1e3:.4f}ms "
+                f"(+{(cur / base - 1.0) * 100:.1f}% > {rtol * 100:.0f}% "
+                f"tolerance)")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--bins", type=int, default=3,
                    help="simulated device bin count")
@@ -84,29 +155,60 @@ def main() -> None:
     p.add_argument("--host-workers", type=int,
                    default=DEFAULT_SCHED.host_workers,
                    help="simulated host-pool concurrency")
-    args = p.parse_args()
+    p.add_argument("--json", metavar="PATH",
+                   help="write the sweep results as JSON (CI artifact)")
+    p.add_argument("--check-baseline", nargs="?", metavar="PATH",
+                   const=DEFAULT_BASELINE, default=None,
+                   help="fail (exit 1) if the gated policy's makespan "
+                        f"regressed >{REGRESSION_RTOL:.0%} vs the baseline "
+                        "JSON (default: benchmarks/baselines/"
+                        "sched_baseline.json)")
+    p.add_argument("--write-baseline", metavar="PATH",
+                   help="write the gated policy's makespans as a new "
+                        "baseline JSON and exit")
+    args = p.parse_args(argv)
 
-    bins = [f"d{i}" for i in range(args.bins)]
     try:
-        speeds = (tuple(float(s) for s in args.speeds.split(","))
-                  if args.speeds else ())
+        args.parsed_speeds = (tuple(float(s) for s in args.speeds.split(","))
+                              if args.speeds else ())
     except ValueError:
         p.error(f"--speeds must be comma-separated floats, got {args.speeds!r}")
-    model = CostModel(device_speed=speeds)
+    bins = [f"d{i}" for i in range(args.bins)]
+    model = CostModel(device_speed=args.parsed_speeds)
     shapes = [s for s in args.shapes.split(",") if s]
     policies = [s for s in args.policies.split(",") if s]
 
     results: dict[tuple[str, str], float] = {}
+    utils: dict[tuple[str, str], float] = {}
     print("shape,policy,makespan_ms,mean_util,per_bin_util")
     for shape in shapes:
         for pol in policies:
             ms, util = score(pol, shape, bins, model, args.random_seeds,
                              args.host_workers)
             results[(shape, pol)] = ms
-            mean_u = sum(util.values()) / len(util)
+            utils[(shape, pol)] = sum(util.values()) / len(util)
             per_bin = "/".join(f"{util[i]:.2f}" for i in sorted(util))
-            print(f"{shape},{pol},{ms * 1e3:.4f},{mean_u:.3f},{per_bin}",
-                  flush=True)
+            print(f"{shape},{pol},{ms * 1e3:.4f},"
+                  f"{utils[(shape, pol)]:.3f},{per_bin}", flush=True)
+
+    payload = results_payload(args, results, utils)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"json,{args.json}")
+    if args.write_baseline:
+        os.makedirs(os.path.dirname(args.write_baseline) or ".",
+                    exist_ok=True)
+        baseline = {k: payload[k] for k in
+                    ("version", "bins", "speeds", "host_workers")}
+        baseline["makespan_s"] = {
+            shape: {GATED_POLICY: pols[GATED_POLICY]}
+            for shape, pols in payload["makespan_s"].items()
+            if GATED_POLICY in pols}
+        with open(args.write_baseline, "w") as f:
+            json.dump(baseline, f, indent=1)
+        print(f"baseline,{args.write_baseline}")
+        return 0
 
     ok = True
     for shape in ("fanout", "diamond"):
@@ -118,9 +220,23 @@ def main() -> None:
             ok &= good
             print(f"check,heft_beats_random_{shape},{verdict},"
                   f"heft={h * 1e3:.4f}ms,random={r * 1e3:.4f}ms")
-    if not ok:
-        sys.exit(1)
+
+    if args.check_baseline:
+        try:
+            with open(args.check_baseline) as f:
+                baseline = json.load(f)
+        except (OSError, ValueError) as e:   # missing file or corrupt JSON
+            print(f"check,baseline,FAIL,unreadable baseline: {e}")
+            return 1
+        failures = check_baseline(payload, baseline)
+        for msg in failures:
+            print(f"check,baseline_regression,FAIL,{msg}")
+        if not failures:
+            print(f"check,baseline,PASS,{args.check_baseline}")
+        ok &= not failures
+
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -176,6 +176,41 @@ def build_diamond(width: int = 6, cost: float = 100.0, nbytes: int = 1024):
     return G
 
 
+def build_steal_stress(width: int = 50, nbytes: int = 1024):
+    """Two synchronized fan-outs that force victim-deque work stealing.
+
+    ``gate → root_b0 → width kernels`` and ``gate → root_b1 → width
+    kernels``; every node's name carries its intended bin tag (``b0`` /
+    ``b1``) so a test scheduler can split the two fans across two bins
+    deterministically.  The fan *pulls* are created before the root
+    pulls, so the submit queue drains them first and each root's
+    completion readies its whole fan at once — piling ``width`` same-bin
+    kernels into the finishing worker's deque, exactly the contended
+    shape where locality-aware victim selection departs from random
+    (tests/test_sched.py asserts the steal counters diverge).
+    """
+    G = Heteroflow("steal_stress")
+    gate = G.host(lambda: None, name="gate")
+    fan_pulls = {
+        b: [G.pull(np.ones(nbytes // 4, np.float32), name=f"p_b{b}_{i}")
+            for i in range(width)]
+        for b in (0, 1)
+    }
+    roots = {}
+    for b in (0, 1):
+        rp = G.pull(np.ones(nbytes // 4, np.float32), name=f"rp_b{b}")
+        root = G.kernel(lambda a: float(np.asarray(a).sum()), rp,
+                        cost=10.0, name=f"root_b{b}")
+        root.succeed(rp, gate)
+        roots[b] = root
+    for b in (0, 1):
+        for i, p in enumerate(fan_pulls[b]):
+            k = G.kernel(lambda own, r: float(np.asarray(own).sum()) + r,
+                         p, roots[b], cost=1.0, name=f"k_b{b}_{i}")
+            k.succeed(p, roots[b])
+    return G
+
+
 def build_random_dag(n_kernels: int = 64, seed: int = 0, fan_in: int = 3,
                      nbytes: int = 512, with_pushes: bool = True):
     """Seeded layered random DAG of ``n_kernels`` kernels.

@@ -6,6 +6,9 @@ irregular, dependent workload where the paper observes saturation.
 
     PYTHONPATH=src python examples/detailed_placement.py --iters 8 \
         --policy round_robin
+    # record a calibration trace / fit the simulator from a prior one
+    PYTHONPATH=src python examples/detailed_placement.py --profile /tmp/dp.json
+    PYTHONPATH=src python examples/detailed_placement.py --calibrate /tmp/dp.json
 """
 import argparse
 import os
@@ -18,7 +21,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.workloads import build_detailed_placement
 from repro.configs import DEFAULT_SCHED
 from repro.core import Executor
-from repro.sched import available_policies, simulate
+from repro.sched import (
+    CostModel,
+    TaskProfiler,
+    available_policies,
+    load_trace,
+    simulate,
+)
 
 
 def main():
@@ -29,21 +38,54 @@ def main():
     p.add_argument("--policy", default=DEFAULT_SCHED.policy,
                    choices=available_policies(),
                    help="placement policy (repro.sched registry)")
+    p.add_argument("--profile", metavar="PATH",
+                   default=DEFAULT_SCHED.trace_path or None,
+                   help="record a TaskProfiler JSON trace of the run "
+                        "(default: SchedConfig.trace_path)")
+    p.add_argument("--calibrate", metavar="TRACE",
+                   help="fit the simulator's CostModel from a recorded "
+                        "trace, so 'simulated' predicts wall-clock")
+    p.add_argument("--repeat", type=int, default=1,
+                   help="run the graph N times (stateful, run_n); "
+                        "dynamic re-placement only fires between repeats")
+    p.add_argument("--replace-every", type=int,
+                   default=DEFAULT_SCHED.replace_every,
+                   help="re-invoke the scheduler every N repeats with "
+                        "measured per-bin load (0 = off; needs --repeat>1)")
+    p.add_argument("--no-steal-locality", dest="steal_locality",
+                   action="store_false",
+                   default=DEFAULT_SCHED.steal_locality,
+                   help="random-victim stealing instead of locality-aware")
     args = p.parse_args()
 
+    model = (CostModel.fit(load_trace(args.calibrate)) if args.calibrate
+             else CostModel(device_speed=DEFAULT_SCHED.device_speed))
     G, objective = build_detailed_placement(args.iters, args.cells)
     print(f"graph: {len(G)} tasks for {args.iters} iterations")
+    profiler = TaskProfiler() if args.profile else None
     t0 = time.perf_counter()
-    with Executor(num_workers=args.workers, scheduler=args.policy) as ex:
+    with Executor(num_workers=args.workers, scheduler=args.policy,
+                  profiler=profiler,
+                  steal_locality=args.steal_locality,
+                  replace_every=args.replace_every) as ex:
         # score the executor's own scheduler instance: the placement
         # simulated is the one ex.run() recomputes identically below
         sim = simulate(G, ex.scheduler.schedule(G, ex.devices),
-                       ex.devices, host_workers=args.workers)
-        ex.run(G).result(timeout=600)
+                       ex.devices, cost_model=model,
+                       host_workers=args.workers)
+        ex.run_n(G, args.repeat).result(timeout=600)
+        st = ex.stats()
     dt = time.perf_counter() - t0
-    print(f"{args.iters} iterations policy={args.policy} in {dt:.2f}s; "
-          f"simulated {sim.summary()}; "
+    extra = " [calibrated]" if args.calibrate else ""
+    if args.replace_every:
+        extra += f" replacements={st['replacements']}"
+    print(f"{args.iters} iterations x {args.repeat} policy={args.policy} "
+          f"in {dt:.2f}s; simulated {sim.summary()}{extra}; "
           f"objective trace: {[round(o, 1) for o in objective[:8]]}")
+    if profiler is not None:
+        profiler.save(args.profile)
+        print(f"trace: {len(profiler.records)} records -> {args.profile} "
+              f"(measured makespan {profiler.makespan() * 1e3:.1f}ms)")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,9 @@ of paper Fig. 6 on CPU.
 
     PYTHONPATH=src python examples/timing_analysis.py --views 32 --workers 4 \
         --policy heft
+    # profile-guided loop: record a trace, then predict from it
+    PYTHONPATH=src python examples/timing_analysis.py --profile /tmp/trace.json
+    PYTHONPATH=src python examples/timing_analysis.py --calibrate /tmp/trace.json
 """
 import argparse
 import os
@@ -19,7 +22,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.workloads import build_timing_analysis
 from repro.configs import DEFAULT_SCHED
 from repro.core import Executor
-from repro.sched import available_policies, simulate
+from repro.sched import (
+    CostModel,
+    TaskProfiler,
+    available_policies,
+    load_trace,
+    simulate,
+)
 
 
 def main():
@@ -31,23 +40,59 @@ def main():
                    help="placement policy (repro.sched registry)")
     p.add_argument("--sweep", action="store_true",
                    help="sweep worker counts like paper Fig. 6")
+    p.add_argument("--profile", metavar="PATH",
+                   default=DEFAULT_SCHED.trace_path or None,
+                   help="record a TaskProfiler JSON trace of the run "
+                        "(default: SchedConfig.trace_path)")
+    p.add_argument("--calibrate", metavar="TRACE",
+                   help="fit the simulator's CostModel from a recorded "
+                        "trace, so 'simulated' predicts wall-clock")
+    p.add_argument("--repeat", type=int, default=1,
+                   help="run the graph N times (stateful, run_n); "
+                        "dynamic re-placement only fires between repeats")
+    p.add_argument("--replace-every", type=int,
+                   default=DEFAULT_SCHED.replace_every,
+                   help="re-invoke the scheduler every N repeats with "
+                        "measured per-bin load (0 = off; needs --repeat>1)")
+    p.add_argument("--no-steal-locality", dest="steal_locality",
+                   action="store_false",
+                   default=DEFAULT_SCHED.steal_locality,
+                   help="random-victim stealing instead of locality-aware")
     args = p.parse_args()
 
+    model = (CostModel.fit(load_trace(args.calibrate)) if args.calibrate
+             else CostModel(device_speed=DEFAULT_SCHED.device_speed))
     workers = (1, 2, 4) if args.sweep else (args.workers,)
     for w in workers:
         G, outs = build_timing_analysis(args.views)
+        profiler = TaskProfiler() if args.profile else None
         t0 = time.perf_counter()
-        with Executor(num_workers=w, scheduler=args.policy) as ex:
+        with Executor(num_workers=w, scheduler=args.policy,
+                      profiler=profiler,
+                      steal_locality=args.steal_locality,
+                      replace_every=args.replace_every) as ex:
             # score the executor's own scheduler instance: the placement
             # simulated is the one ex.run() recomputes identically below
             sim = simulate(G, ex.scheduler.schedule(G, ex.devices),
-                           ex.devices, host_workers=w)
-            ex.run(G).result(timeout=600)
+                           ex.devices, cost_model=model, host_workers=w)
+            ex.run_n(G, args.repeat).result(timeout=600)
+            st = ex.stats()
         dt = time.perf_counter() - t0
         done = sum(1 for o in outs if (o != 0).any())
-        print(f"workers={w} policy={args.policy}: {args.views} views in "
-              f"{dt:.2f}s ({args.views / dt:.1f} views/s), "
-              f"{done} models fitted; simulated {sim.summary()}")
+        extra = " [calibrated]" if args.calibrate else ""
+        if args.replace_every:
+            extra += f" replacements={st['replacements']}"
+        print(f"workers={w} policy={args.policy}: {args.views} views x "
+              f"{args.repeat} in {dt:.2f}s "
+              f"({args.views * args.repeat / dt:.1f} views/s), "
+              f"{done} models fitted; simulated {sim.summary()}{extra}")
+        if profiler is not None:
+            # one trace per sweep point — don't clobber earlier runs
+            path = (args.profile if len(workers) == 1
+                    else f"{args.profile}.w{w}")
+            profiler.save(path)
+            print(f"trace: {len(profiler.records)} records -> {path} "
+                  f"(measured makespan {profiler.makespan() * 1e3:.1f}ms)")
 
 
 if __name__ == "__main__":

@@ -17,7 +17,6 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import LayerGroup

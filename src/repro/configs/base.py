@@ -201,10 +201,20 @@ class SchedConfig:
     ``device_speed`` (bin heterogeneity for simulation/HEFT; empty =
     homogeneous) and ``host_workers`` (simulated host-pool concurrency)
     are the defaults ``benchmarks/sched_bench.py`` starts from.
+
+    Profile-guided knobs (docs/scheduling.md "profile → fit → re-place"):
+    ``steal_locality`` toggles the executor's locality-aware work
+    stealing; ``replace_every`` (> 0) re-invokes the scheduler between
+    graph iterations using measured per-bin load; ``trace_path``, when
+    set, records a ``sched.TaskProfiler`` trace there for offline
+    ``CostModel.fit`` calibration.
     """
     policy: str = "balanced"
     host_workers: int = 4
     device_speed: tuple[float, ...] = ()
+    steal_locality: bool = True
+    replace_every: int = 0
+    trace_path: str = ""
 
 
 DEFAULT_SCHED = SchedConfig()

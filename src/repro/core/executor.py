@@ -37,7 +37,7 @@ import numpy as np
 from .graph import Heteroflow, KernelTask, Node, PullTask, TaskType, _span_view
 from .memory import DeviceArena
 from .placement import estimate_node_cost
-from .streams import DispatchLane, LaneRegistry, ScopedDeviceContext
+from .streams import LaneRegistry, ScopedDeviceContext, bin_labels, dedup_labels
 
 __all__ = ["Executor", "Topology"]
 
@@ -79,7 +79,8 @@ class Topology:
 
 class _Worker:
     __slots__ = ("id", "deque", "lock", "rng", "thread", "steals", "executed",
-                 "last_beat")
+                 "last_beat", "last_bin", "steal_local", "steal_cross",
+                 "bin_busy")
 
     def __init__(self, wid: int):
         self.id = wid
@@ -90,6 +91,25 @@ class _Worker:
         self.steals = 0
         self.executed = 0
         self.last_beat = time.monotonic()
+        self.last_bin: str | None = None   # bin label of last device task run
+        self.steal_local = 0               # stolen device task on last_bin
+        self.steal_cross = 0               # stolen device task on another bin
+        # cumulative busy seconds per bin label; the Executor pre-creates
+        # every label key so the key set never changes — this worker's
+        # thread updates values lock-free, readers iterate safely
+        self.bin_busy: dict[str, float] = {}
+
+
+def _head_bin(v: _Worker) -> str | None:
+    """Bin label of the node a thief would steal from ``v`` (deque head).
+
+    Lock-free peek: a stale or torn read only degrades the locality
+    *heuristic* — the actual steal below re-checks under the lock.
+    """
+    try:
+        return v.deque[0].bin_key
+    except IndexError:
+        return None
 
 
 class Executor:
@@ -106,6 +126,19 @@ class Executor:
         a registry name (``"balanced"`` — the paper's Algorithm 1 and the
         default — ``"heft"``, ``"round_robin"``, ``"random"``).  Policies
         decide locality only; graph semantics are identical under any.
+    profiler: optional ``repro.sched.TaskProfiler``; every executed node
+        is reported with wall-clock timestamps, bin label, and bytes
+        moved, building the JSON trace ``CostModel.fit`` calibrates from.
+    steal_locality: when True (default), thieves try victims whose deque
+        head is placed on the same bin as the thief's last-executed
+        device task before falling back to random victims — stolen work
+        stays near warm device state, cutting the cross-bin traffic the
+        simulator charges for.  Steal hit/miss counters are surfaced via
+        :meth:`stats` under either setting.
+    replace_every: if > 0, ``run_until``/``run_n`` re-invoke the
+        scheduler every N completed iterations, feeding measured per-bin
+        busy seconds back through the policy's ``initial_load`` hook
+        (dynamic re-placement — the profile-guided loop, online).
     """
 
     def __init__(
@@ -116,6 +149,9 @@ class Executor:
         arena_bytes: int | None = None,
         cost_fn: Callable[[Node], float] = estimate_node_cost,
         scheduler: Any = "balanced",
+        profiler: Any = None,
+        steal_locality: bool = True,
+        replace_every: int = 0,
     ):
         from ..sched import get_scheduler  # lazy: sched imports core
         if num_workers is None:
@@ -123,11 +159,22 @@ class Executor:
             num_workers = os.cpu_count() or 1
         if num_workers < 1:
             raise ValueError("need at least one worker")
+        if replace_every < 0:
+            raise ValueError("replace_every must be >= 0")
         self.devices = list(devices) if devices is not None else list(jax.devices())
         if not self.devices:
             raise ValueError("need at least one device bin")
+        self.device_labels = bin_labels(self.devices)
         self._cost_fn = cost_fn
         self.scheduler = get_scheduler(scheduler)
+        self._profiler = profiler
+        self._steal_locality = steal_locality
+        self._replace_every = replace_every
+        self._replacements = 0
+        # re-placement measures load per window as a delta against this
+        # snapshot of the workers' cumulative per-bin busy counters
+        self._busy_snapshot: dict[str, float] = {}
+        self._busy_lock = threading.Lock()
         self.lanes = LaneRegistry()
         self.arenas = (
             {id(d): DeviceArena(d, arena_bytes) for d in self.devices}
@@ -135,6 +182,10 @@ class Executor:
         )
 
         self._workers = [_Worker(i) for i in range(num_workers)]
+        for w in self._workers:
+            # fixed key set (placement only ever yields these labels):
+            # lock-free value updates stay safe to iterate concurrently
+            w.bin_busy = {label: 0.0 for label in self.device_labels}
         self._submit_q: deque[Node] = deque()
         self._submit_lock = threading.Lock()
 
@@ -190,6 +241,11 @@ class Executor:
                    ((dd, self.arenas.get(id(dd))) for dd in self.devices) if a}
         self.scheduler.schedule(graph, self.devices, self._cost_fn,
                                 initial_load=initial or None)
+        if self._replace_every:
+            # re-placement windows start NOW — don't let a previous run's
+            # busy history leak into this topology's first window
+            with self._busy_lock:
+                self._busy_snapshot = self._merged_bin_busy()
         with self._topo_cv:
             self._topologies.add(topo.id)
         sources = topo._arm()
@@ -217,14 +273,61 @@ class Executor:
         return False
 
     # -- introspection ---------------------------------------------------
+    def _merged_bin_busy(self) -> dict[str, float]:
+        """Cumulative busy seconds per bin label, summed over workers.
+        Safe without locks: every worker dict holds the same fixed key
+        set (created up front), so concurrent value updates never change
+        the dict size mid-iteration."""
+        busy: dict[str, float] = {label: 0.0 for label in self.device_labels}
+        for w in self._workers:
+            for label, secs in w.bin_busy.items():
+                busy[label] += secs
+        return busy
+
+    def _lane_views(self) -> list[tuple[str, Any]]:
+        """(stable key, lane) pairs.
+
+        Lanes created for this executor's bins are labeled with the
+        bins-order ``device_labels`` slot — NOT lane-creation order,
+        which is thread-timing-dependent — so the same string denotes
+        the same bin slot in ``stats()``, in trace ``meta.bins``, and
+        across runs.  Distinct bin objects sharing a physical device key
+        thus get distinct ``#slot`` suffixes instead of collapsing into
+        one dict entry; any lane for a device outside the bin list falls
+        back to its raw device key (deduped positionally).
+        """
+        label_of: dict[int, str] = {}
+        for d, label in zip(self.devices, self.device_labels):
+            label_of.setdefault(id(d), label)  # first slot claims dup objects
+        views: list[tuple[str, Any]] = []
+        foreign = []
+        for lane in self.lanes.lanes():
+            label = label_of.get(id(lane.device))
+            if label is not None:
+                views.append((label, lane))
+            else:
+                foreign.append(lane)
+        views.sort(key=lambda kv: kv[0])       # bins order, not creation order
+        keys = dedup_labels([lane.key for lane in foreign])
+        views.extend(zip(keys, foreign))
+        return views
+
     def stats(self) -> dict[str, Any]:
         return {
             "workers": self.num_workers,
             "devices": len(self.devices),
             "policy": self.scheduler.name,
             "steals": sum(w.steals for w in self._workers),
+            "steal_local": sum(w.steal_local for w in self._workers),
+            "steal_cross": sum(w.steal_cross for w in self._workers),
+            "steal_locality": self._steal_locality,
             "executed": sum(w.executed for w in self._workers),
-            "lane_depths": {i: l.depth() for i, l in enumerate(self.lanes.lanes())},
+            "replacements": self._replacements,
+            "bin_busy_s": self._merged_bin_busy(),
+            # keyed by the run-stable bin label, not enumeration order —
+            # profiler traces correlate lane state across runs by this id
+            "lane_depths": {key: lane.depth()
+                            for key, lane in self._lane_views()},
         }
 
     def stragglers(self, threshold_s: float = 5.0) -> list[int]:
@@ -257,18 +360,41 @@ class Executor:
             return w.deque.pop() if w.deque else None
 
     def _steal(self, w: _Worker) -> Node | None:
-        """One steal round: random victim order + the submit queue."""
+        """One steal round: victims in random order — same-bin victims
+        first when locality-aware — then the submit queue.
+
+        Placement is known at steal time (the scheduler runs before any
+        node is enqueued), so a thief that just ran a task on bin B
+        prefers victims whose stealable head is also placed on B; random
+        order is the tie-break within each class and the fallback when
+        nothing matches (or ``steal_locality=False``).
+        """
         victims = [v for v in self._workers if v is not w]
         w.rng.shuffle(victims)
+        if self._steal_locality and w.last_bin is not None:
+            # stable sort: matching-bin victims first, shuffled order kept
+            victims.sort(key=lambda v: _head_bin(v) != w.last_bin)
         for v in victims:
             with v.lock:
                 if v.deque:
+                    node = v.deque.popleft()
                     w.steals += 1
-                    return v.deque.popleft()
+                    self._note_steal(w, node)
+                    return node
         with self._submit_lock:
             if self._submit_q:
                 return self._submit_q.popleft()
         return None
+
+    def _note_steal(self, w: _Worker, node: Node) -> None:
+        """Locality hit/miss accounting — only meaningful for device
+        tasks stolen by a thief with a known last bin."""
+        if node.bin_key is None or w.last_bin is None:
+            return
+        if node.bin_key == w.last_bin:
+            w.steal_local += 1
+        else:
+            w.steal_cross += 1
 
     def _worker_loop(self, w: _Worker) -> None:
         self._local.worker = w
@@ -321,11 +447,29 @@ class Executor:
     def _invoke(self, w: _Worker, node: Node) -> None:
         topo: Topology = node.topology
         if topo.failed is None:
+            start = time.perf_counter()
             try:
                 handler = self._VISITOR[node.type]
                 handler(self, w, node)
             except BaseException as e:  # noqa: BLE001 — propagate via future
                 topo.failed = e
+            end = time.perf_counter()
+            # telemetry must not kill the worker: a raising cost_fn or
+            # profiler routes into topo.failed like any task exception,
+            # so the topology future still resolves
+            try:
+                if node.bin_key is not None:
+                    w.last_bin = node.bin_key
+                    if node.bin_key in w.bin_busy:  # fixed key set
+                        w.bin_busy[node.bin_key] += end - start
+                if self._profiler is not None:
+                    self._profiler.record(node, worker=w.id,
+                                          iteration=topo.iteration,
+                                          start=start, end=end,
+                                          cost=self._cost_fn(node))
+            except BaseException as e:  # noqa: BLE001 — propagate via future
+                if topo.failed is None:
+                    topo.failed = e
         self._finish_node(node)
 
     def _invoke_host(self, w: _Worker, node: Node) -> None:
@@ -441,11 +585,24 @@ class Executor:
                 stop = True
         else:
             stop = True
+        if (not stop and self._replace_every
+                and topo.iteration % self._replace_every == 0):
+            try:
+                self._replace(topo)
+            except BaseException as e:  # noqa: BLE001 — propagate via future
+                topo.failed = e
+                stop = True
         if not stop:
             sources = topo._arm()
             self._bulk_enqueue(sources)
             return
         # retire topology
+        if self._profiler is not None:
+            try:
+                self._profiler.finalize(self)
+            except BaseException as e:  # noqa: BLE001 — same rule as record()
+                if topo.failed is None:
+                    topo.failed = e
         with self._topo_cv:
             self._topologies.discard(topo.id)
             self._topo_cv.notify_all()
@@ -453,3 +610,47 @@ class Executor:
             topo.future.set_exception(topo.failed)
         else:
             topo.future.set_result(topo.iteration)
+
+    def _replace(self, topo: Topology) -> None:
+        """Dynamic re-placement (profile-guided loop, online half).
+
+        Safe here: the iteration fully drained (``_remaining == 0``), no
+        node of this topology is in flight, and sources are re-enqueued
+        only after the new placement is written back.  Measured busy
+        seconds are consumed *per re-placement window*: the delta since
+        the previous snapshot (reset at ``run_until`` submission), so
+        the bias reflects the recent imbalance, not all history.  The
+        snapshot is executor-wide: with several concurrently repeating
+        topologies the windows interleave and each re-placement sees the
+        combined recent load — coarser, but the aggregate bias is still
+        the load the devices actually carried.
+        """
+        with self._busy_lock:
+            current = self._merged_bin_busy()
+            window = {label: current.get(label, 0.0)
+                      - self._busy_snapshot.get(label, 0.0)
+                      for label in set(current) | set(self._busy_snapshot)}
+            self._busy_snapshot = current
+        # keyed by bin INDEX (sched.base.bin_load reads either keying):
+        # duplicate/equal bin objects would collapse an object-keyed dict
+        # and erase exactly the per-slot imbalance this measures
+        measured = {i: window.get(label, 0.0)
+                    for i, label in enumerate(self.device_labels)}
+        if self.arenas:
+            old_device = {n.id: n.device for n in topo.graph.nodes}
+        self.scheduler.reschedule(topo.graph, self.devices, self._cost_fn,
+                                  measured_load=measured)
+        if self.arenas:
+            # a moved pull's arena block belongs to the *old* device; free
+            # it so occupancy stays honest and the next pull on the new
+            # bin re-allocates there (the "arena_off" guard in
+            # _invoke_pull only allocates when the key is absent)
+            for n in topo.graph.nodes:
+                off = n.state.get("arena_off")
+                if off is None or n.device is old_device[n.id]:
+                    continue
+                arena = self.arenas.get(id(old_device[n.id]))
+                if arena is not None:
+                    arena.free(off)
+                del n.state["arena_off"]
+        self._replacements += 1

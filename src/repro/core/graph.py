@@ -26,7 +26,7 @@ import enum
 import io
 import itertools
 import threading
-from typing import Any, Callable, Iterable, Sequence
+from typing import Any, Callable, Sequence
 
 import numpy as np
 
@@ -63,7 +63,7 @@ class Node:
 
     __slots__ = (
         "id", "name", "type", "work", "successors", "dependents",
-        "device", "group", "state", "join_counter", "topology",
+        "device", "group", "bin_key", "state", "join_counter", "topology",
     )
 
     def __init__(self, type_: TaskType, name: str | None = None):
@@ -75,6 +75,7 @@ class Node:
         self.dependents: list[Node] = []
         self.device = None          # assigned by placement (Algorithm 1)
         self.group: int | None = None  # union-find root id after placement
+        self.bin_key: str | None = None  # stable bin label (sched.apply_assignment)
         self.state: dict[str, Any] = {}  # runtime state (device buffers &c.)
         self.join_counter = 0
         self.topology = None

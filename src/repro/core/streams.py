@@ -20,11 +20,50 @@ import contextlib
 import threading
 import time
 from collections import deque
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 
-__all__ = ["DispatchLane", "ScopedDeviceContext", "LaneRegistry"]
+__all__ = ["DispatchLane", "ScopedDeviceContext", "LaneRegistry",
+           "device_key", "bin_labels", "dedup_labels"]
+
+
+def device_key(device: Any) -> str:
+    """Stable identifier of a *physical* device bin, usable across runs.
+
+    ``jax.Device`` → ``"platform:id"``; strings pass through; anything
+    else (shardings, sub-meshes) falls back to its repr, which JAX keeps
+    deterministic for a fixed mesh layout.  Profiler traces and
+    ``Executor.stats()['lane_depths']`` key on this instead of the
+    enumeration index, so two runs over the same hardware agree on bin
+    identities.
+    """
+    if isinstance(device, jax.Device):
+        return f"{device.platform}:{device.id}"
+    if isinstance(device, str):
+        return device
+    return f"{type(device).__name__}:{device!r}"
+
+
+def dedup_labels(keys: Sequence[str]) -> list[str]:
+    """Disambiguate repeated keys with a positional ``#<slot>`` suffix,
+    keeping unique keys untouched — stable for a fixed input order."""
+    seen: dict[str, int] = {}
+    for k in keys:
+        seen[k] = seen.get(k, 0) + 1
+    return [f"{k}#{i}" if seen[k] > 1 else k for i, k in enumerate(keys)]
+
+
+def bin_labels(bins: Sequence[Any]) -> list[str]:
+    """Stable label per *scheduling* bin slot.
+
+    Normally ``device_key`` of each bin; duplicate physical devices in
+    the bin list (e.g. ``jax.devices() * 2`` on a one-device host) get a
+    ``#<slot>`` suffix so every slot keeps a distinct, run-stable
+    identity — required for locality-aware stealing and per-bin
+    calibration to remain meaningful when bins outnumber devices.
+    """
+    return dedup_labels([device_key(b) for b in bins])
 
 
 class DispatchLane:
@@ -32,16 +71,29 @@ class DispatchLane:
 
     def __init__(self, device: Any):
         self.device = device
+        self.key = device_key(device)
         self._lock = threading.Lock()
         self._inflight: deque = deque()
         self.dispatched = 0
         self.retired = 0
+        self.first_dispatch_ts: float | None = None
+        self.last_dispatch_ts: float | None = None
+        self.last_retire_ts: float | None = None
 
     def record(self, token: Any) -> None:
-        """Record a dispatched async value (a jax.Array or pytree)."""
+        """Record a dispatched async value (a jax.Array or pytree).
+
+        Timestamps use ``time.perf_counter`` — the same clock the
+        profiler stamps task records with, so lane residency windows
+        align with trace start/end times.
+        """
+        now = time.perf_counter()
         with self._lock:
             self._inflight.append(token)
             self.dispatched += 1
+            if self.first_dispatch_ts is None:
+                self.first_dispatch_ts = now
+            self.last_dispatch_ts = now
 
     def depth(self) -> int:
         with self._lock:
@@ -58,6 +110,7 @@ class DispatchLane:
             jax.block_until_ready(token)
             with self._lock:
                 self.retired += 1
+                self.last_retire_ts = time.perf_counter()
 
     def retire_ready(self) -> int:
         """Opportunistically pop tokens that have already materialized."""
@@ -72,9 +125,23 @@ class DispatchLane:
                     if self._inflight and self._inflight[0] is token:
                         self._inflight.popleft()
                         self.retired += 1
+                        self.last_retire_ts = time.perf_counter()
                         n += 1
             else:
                 return n
+
+    def snapshot(self) -> dict[str, Any]:
+        """Dispatch/retire counters + timestamps for profiler traces."""
+        with self._lock:
+            return {
+                "key": self.key,
+                "depth": len(self._inflight),
+                "dispatched": self.dispatched,
+                "retired": self.retired,
+                "first_dispatch_ts": self.first_dispatch_ts,
+                "last_dispatch_ts": self.last_dispatch_ts,
+                "last_retire_ts": self.last_retire_ts,
+            }
 
 
 def _is_ready(token: Any) -> bool:

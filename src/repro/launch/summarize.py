@@ -9,8 +9,7 @@ import json
 import os
 import sys
 
-from ..configs import SHAPES, get_config, skipped_cells
-from .roofline import model_flops
+from ..configs import skipped_cells
 
 
 def load(dirpath: str, pod: str = "pod1") -> list[dict]:

@@ -16,7 +16,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from ..configs import get_config, list_archs, reduced as reduce_cfg
 from ..core import Executor, Heteroflow

@@ -9,7 +9,6 @@ VMEM (DESIGN.md §8).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any
 
 import jax

@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..distributed.context import constrain, manual_mode, moe_shard_info
+from ..distributed.context import manual_mode, moe_shard_info
 from .layers import dense_init, ffn_forward, init_ffn
 
 Params = dict
@@ -137,9 +137,7 @@ def _moe_shard_map(cfg, p: Params, x, cdt, mesh, baxes, maxis):
 
     m = cfg.moe
     B, S, d = x.shape
-    T = B * S
     E = m.n_experts
-    M = int(dict(zip(mesh.axis_names, mesh.devices.shape))[maxis])
     all_axes = (*baxes, maxis)
     w = p["experts"]
 

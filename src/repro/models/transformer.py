@@ -11,13 +11,10 @@ scan body (``jax.checkpoint``) with a configurable policy.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs.base import LayerGroup, ModelConfig
 from ..distributed.context import constrain, decode_tp_active
@@ -317,7 +314,6 @@ def loss_fn(cfg: ModelConfig, params: Params, batch: dict,
     if "extra_embeds" in batch and batch["extra_embeds"] is not None:
         P = batch["extra_embeds"].shape[1]
         logits = logits[:, P:]
-    V = logits.shape[-1]
     mask = labels >= 0
     safe = jnp.where(mask, labels, 0)
     logp = jax.nn.log_softmax(logits, axis=-1)

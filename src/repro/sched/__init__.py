@@ -14,6 +14,11 @@ Quick use::
 Policies: ``balanced`` (seed Algorithm 1), ``heft``, ``round_robin``,
 ``random``.  ``Executor(scheduler="heft")`` selects one at runtime;
 ``configs.SchedConfig`` is the config-file knob.  See docs/scheduling.md.
+
+Profile-guided loop (``sched.profile``): run with
+``Executor(profiler=TaskProfiler())``, fit a calibrated model via
+``CostModel.fit(profiler)``, and feed it back through
+``Heft.from_trace`` / ``Executor(replace_every=N)``.
 """
 from .base import (
     Scheduler,
@@ -25,6 +30,7 @@ from .base import (
     register,
 )
 from .policies import BalancedBins, Heft, RandomPolicy, RoundRobin
+from .profile import TaskProfiler, TaskRecord, load_trace, node_bytes
 from .simulator import CostModel, SimReport, simulate
 
 __all__ = [
@@ -32,4 +38,5 @@ __all__ = [
     "register", "get_scheduler", "available_policies",
     "BalancedBins", "Heft", "RoundRobin", "RandomPolicy",
     "CostModel", "SimReport", "simulate",
+    "TaskProfiler", "TaskRecord", "load_trace", "node_bytes",
 ]

@@ -27,6 +27,7 @@ from typing import Any, Callable, Hashable, Mapping, Sequence
 
 from repro.core.graph import Heteroflow, Node, TaskType
 from repro.core.placement import UnionFind, estimate_node_cost
+from repro.core.streams import bin_labels
 
 __all__ = [
     "TaskGroup",
@@ -34,6 +35,7 @@ __all__ = [
     "build_groups",
     "apply_assignment",
     "bin_index",
+    "bin_load",
     "register",
     "get_scheduler",
     "available_policies",
@@ -103,6 +105,26 @@ def bin_index(bins: Sequence[Any], target: Any) -> int | None:
     return None
 
 
+def bin_load(initial_load: Mapping[Any, float] | None, bins: Sequence[Any],
+             i: int) -> float:
+    """Pre-existing load of bin slot ``i``.
+
+    ``initial_load`` is keyed by bin object (the seed ``place()``
+    contract: arena bytes per device) or by bin *index* (the executor's
+    dynamic re-placement — duplicate/equal bin objects would collapse an
+    object-keyed mapping and erase exactly the imbalance it measures).
+    Index keys win when both are present.
+    """
+    if not initial_load:
+        return 0.0
+    if i in initial_load:
+        return float(initial_load[i])
+    try:
+        return float(initial_load.get(bins[i], 0.0))
+    except TypeError:          # unhashable bin object
+        return 0.0
+
+
 def apply_assignment(
     graph: Heteroflow,
     groups: Sequence[TaskGroup],
@@ -110,15 +132,24 @@ def apply_assignment(
     assignment: Mapping[Hashable, int],
 ) -> dict[int, Any]:
     """Write a ``{group.root: bin_index}`` decision back onto the graph
-    (``node.device`` / ``node.group``) and return the paper-shaped
-    ``{node.id: bin}`` placement map."""
+    (``node.device`` / ``node.group`` / ``node.bin_key``) and return the
+    paper-shaped ``{node.id: bin}`` placement map.
+
+    ``bin_key`` is the run-stable bin-slot label (``core.streams.bin_labels``)
+    consumed by the profiler's traces and the executor's locality-aware
+    stealing — both need bin identities that survive across runs, which
+    enumeration indices and ``id()`` keys do not.
+    """
+    labels = bin_labels(bins)
     placement: dict[int, Any] = {}
     for g in groups:
-        b = bins[assignment[g.root]]
+        idx = assignment[g.root]
+        b = bins[idx]
         for t in g.nodes:
             placement[t.id] = b
             t.device = b
             t.group = g.root
+            t.bin_key = labels[idx]
     return placement
 
 
@@ -129,6 +160,12 @@ class Scheduler(abc.ABC):
     pin handling and graph write-back are shared.  ``initial_load`` lets
     the executor bias placement by bytes already resident per bin (arena
     occupancy), mirroring the seed ``place()`` contract.
+
+    Units: ``initial_load`` values share ``cost_fn``'s units — the seed
+    contract packs resident arena *bytes* against group costs, which is
+    commensurate under the default cost metric (pull cost = span bytes).
+    Callers using a custom cost scale should rescale their loads the way
+    :meth:`reschedule` rescales measured seconds.
     """
 
     #: registry key; subclasses must override.
@@ -148,6 +185,38 @@ class Scheduler(abc.ABC):
         assignment = self.assign(graph, groups, bins, initial_load=initial_load)
         return apply_assignment(graph, groups, bins, assignment)
 
+    def reschedule(
+        self,
+        graph: Heteroflow,
+        bins: Sequence[Any],
+        cost_fn: CostFn = estimate_node_cost,
+        *,
+        measured_load: Mapping[Any, float],
+    ) -> dict[int, Any]:
+        """Dynamic re-placement between graph iterations.
+
+        ``measured_load`` maps each bin — by object, or by bin *index*
+        when bin objects are duplicated/equal and an object key would
+        collapse slots — to the busy *seconds* the executor observed on
+        it since the last (re-)placement.  Seconds are not the cost
+        units policies pack with, so they are rescaled into cost units
+        (total group cost / total measured seconds) before being fed
+        through the existing ``initial_load`` hook — a bin that soaked
+        up 60% of the measured time starts the new packing with 60% of
+        the graph's cost already "resident", steering the next
+        iteration's load away from it.
+        """
+        groups = build_groups(graph, cost_fn)
+        total_cost = sum(g.cost for g in groups)
+        total_meas = sum(measured_load.values())
+        if total_meas > 0 and total_cost > 0:
+            scale = total_cost / total_meas
+            load = {b: v * scale for b, v in measured_load.items()}
+        else:
+            load = dict(measured_load)
+        assignment = self.assign(graph, groups, bins, initial_load=load or None)
+        return apply_assignment(graph, groups, bins, assignment)
+
     @abc.abstractmethod
     def assign(
         self,
@@ -158,7 +227,9 @@ class Scheduler(abc.ABC):
         initial_load: Mapping[Any, float] | None = None,
     ) -> dict[Hashable, int]:
         """Map each group root to a bin index.  Must honor ``group.pin``
-        when the pinned bin is present in ``bins``."""
+        when the pinned bin is present in ``bins``.  ``initial_load``
+        may be keyed by bin object or bin index (use
+        :func:`bin_load` to read it either way)."""
 
     def _pinned_index(self, g: TaskGroup, bins: Sequence[Any]) -> int | None:
         if g.pin is None:

@@ -23,7 +23,7 @@ from typing import Any, Hashable, Mapping, Sequence
 
 from repro.core.graph import Heteroflow, Node, TaskType
 
-from .base import Scheduler, TaskGroup, register
+from .base import Scheduler, TaskGroup, bin_load, register
 from .simulator import CostModel
 
 __all__ = ["BalancedBins", "Heft", "RoundRobin", "RandomPolicy"]
@@ -45,10 +45,8 @@ class BalancedBins(Scheduler):
                bins: Sequence[Any], *,
                initial_load: Mapping[Any, float] | None = None,
                ) -> dict[Hashable, int]:
-        load: dict[int, float] = {i: 0.0 for i in range(len(bins))}
-        if initial_load:
-            for i, b in enumerate(bins):
-                load[i] = float(initial_load.get(b, 0.0))
+        load: dict[int, float] = {i: bin_load(initial_load, bins, i)
+                                  for i in range(len(bins))}
         assignment: dict[Hashable, int] = {}
         for g in sorted(groups, key=lambda g: -g.cost):
             idx = self._pinned_index(g, bins)
@@ -62,7 +60,11 @@ class BalancedBins(Scheduler):
 @register
 class RoundRobin(Scheduler):
     """Groups to bins cyclically in first-seen order; pins don't advance
-    the cursor (a pinned group was never the policy's choice)."""
+    the cursor (a pinned group was never the policy's choice).
+
+    Deliberately load-blind: ``initial_load`` is ignored (this is the
+    locality-blind baseline), so dynamic re-placement recomputes the
+    same cyclic assignment every window."""
 
     name = "round_robin"
 
@@ -83,7 +85,8 @@ class RoundRobin(Scheduler):
 
 @register
 class RandomPolicy(Scheduler):
-    """Seeded uniform assignment — the floor any real policy must beat."""
+    """Seeded uniform assignment — the floor any real policy must beat.
+    Load-blind by design: ``initial_load`` is ignored."""
 
     name = "random"
 
@@ -128,6 +131,14 @@ class Heft(Scheduler):
     def __init__(self, cost_model: CostModel | None = None):
         self.cost_model = cost_model or CostModel()
 
+    @classmethod
+    def from_trace(cls, trace: Any, *, base: CostModel | None = None) -> "Heft":
+        """HEFT driven by a :meth:`CostModel.fit`-calibrated model — rank
+        and EFT decisions then optimize *measured* seconds, not the
+        round-number defaults (profile-guided scheduling loop; see
+        docs/scheduling.md)."""
+        return cls(CostModel.fit(trace, base=base))
+
     def assign(self, graph: Heteroflow, groups: Sequence[TaskGroup],
                bins: Sequence[Any], *,
                initial_load: Mapping[Any, float] | None = None,
@@ -170,7 +181,14 @@ class Heft(Scheduler):
                     if gd is not None and gd != g.root:
                         preds[g.root].add((gd, model.out_bytes(d)))
 
-        free = [0.0] * n_bins
+        # pre-existing load delays a bin's availability, converted from
+        # cost units to seconds by the same rule EFT charges for kernels.
+        # Per the Scheduler contract, initial_load shares cost_fn's units
+        # (arena bytes under the default byte-based cost metric; rescaled
+        # cost units from reschedule's measured-load path).
+        free = [bin_load(initial_load, bins, i)
+                / (model.compute_rate * (model.speed(i) or 1.0))
+                for i in range(n_bins)]
         finish: dict[Hashable, float] = {}
         placed: dict[Hashable, int] = {}
         assignment: dict[Hashable, int] = {}

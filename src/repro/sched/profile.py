@@ -1,0 +1,220 @@
+"""Executor telemetry → JSON traces → cost-model calibration inputs.
+
+The StarPU lesson (Courtès 2013): a heterogeneous scheduler is only as
+good as its cost model, and the only trustworthy cost model is one fitted
+from *measured* runs.  :class:`TaskProfiler` closes that loop for the
+heteroflow executor:
+
+* the executor's invoke path reports every node it runs — wall-clock
+  start/end, the node's abstract cost, bytes moved, the worker that ran
+  it, and the run-stable bin label (``node.bin_key``) placement assigned;
+* dispatch-lane counters/timestamps (``core.streams.DispatchLane``) are
+  snapshotted at trace finalization, giving per-physical-device residency
+  alongside the per-node records;
+* the result serializes to a versioned JSON trace that
+  :meth:`repro.sched.CostModel.fit` consumes to calibrate
+  ``compute_rate`` / bandwidths / ``device_speed`` — after which the
+  simulator *predicts* measured makespans instead of merely ranking
+  policies.
+
+Trace format (``version`` 1)::
+
+    {
+      "version": 1,
+      "meta": {"bins": ["cpu:0#0", "cpu:0#1"], "workers": 4,
+               "policy": "heft"},
+      "records": [
+        {"node": 17, "name": "k3", "type": "kernel", "bin": "cpu:0#1",
+         "worker": 2, "iteration": 0, "start": 0.0012, "end": 0.0034,
+         "cost": 250.0, "bytes": 0},
+        ...
+      ],
+      "lanes": {"cpu:0": {"dispatched": 96, "retired": 96, "depth": 0,
+                          "first_dispatch_ts": ..., "last_retire_ts": ...}}
+    }
+
+``start``/``end`` are seconds on a shared monotonic clock, rebased so the
+first record starts at 0 when the trace is exported (raw perf-counter
+values are meaningless across processes).
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any
+
+from repro.core.graph import Node, TaskType
+from repro.core.placement import _nbytes
+
+__all__ = ["TaskRecord", "TaskProfiler", "node_bytes", "load_trace"]
+
+TRACE_VERSION = 1
+
+
+def node_bytes(node: Node) -> int:
+    """Bytes a node moves across the host-device boundary.
+
+    Pulls transfer their host span H2D; pushes transfer their source
+    pull's span D2H; kernels and host tasks move nothing directly (their
+    operands are already resident — cross-bin kernel edges are charged by
+    the simulator, not recorded here).
+    """
+    if node.type == TaskType.PULL:
+        return _nbytes(node.state.get("source"), node.state.get("size"))
+    if node.type == TaskType.PUSH:
+        src = node.state.get("src")
+        if src is not None:
+            return _nbytes(src.state.get("source"), src.state.get("size"))
+    return 0
+
+
+@dataclass(frozen=True)
+class TaskRecord:
+    """One executed node: what ran, where, and for how long."""
+
+    node_id: int
+    name: str
+    type: str                  # TaskType.value
+    bin: str | None            # stable bin label; None for host-pool tasks
+    worker: int
+    iteration: int
+    start: float               # seconds, shared monotonic clock
+    end: float
+    cost: float                # abstract cost (executor's cost_fn)
+    bytes: int
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+
+class TaskProfiler:
+    """Collects :class:`TaskRecord`s from a live executor run.
+
+    Thread-safe: every worker thread reports through :meth:`record`.
+    Pass one to ``Executor(profiler=...)``; the executor calls
+    :meth:`record` per executed node and :meth:`finalize` is invoked by
+    the user (or implicitly by :meth:`trace`) to snapshot lane state.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._records: list[TaskRecord] = []
+        self._lanes: dict[str, dict[str, Any]] = {}
+        self._meta: dict[str, Any] = {}
+
+    # -- collection (executor side) ------------------------------------
+    def record(self, node: Node, *, worker: int, iteration: int,
+               start: float, end: float, cost: float) -> None:
+        rec = TaskRecord(
+            node_id=node.id,
+            name=node.name,
+            type=node.type.value,
+            bin=node.bin_key,
+            worker=worker,
+            iteration=iteration,
+            start=start,
+            end=end,
+            cost=cost,
+            bytes=node_bytes(node),
+        )
+        with self._lock:
+            self._records.append(rec)
+
+    def finalize(self, executor: Any) -> None:
+        """Snapshot executor metadata + per-device lane counters.
+
+        Lane keys use the executor's ``_lane_views`` labeling (shared
+        with ``stats()["lane_depths"]``): lanes backing this executor's
+        bins carry the bins-order ``meta.bins`` label, so the same
+        string denotes the same bin slot in ``records[*].bin``,
+        ``meta.bins``, and ``lanes`` — stable across runs.
+        """
+        lanes = {key: lane.snapshot()
+                 for key, lane in executor._lane_views()}
+        meta = {
+            "bins": list(executor.device_labels),
+            "workers": executor.num_workers,
+            "policy": executor.scheduler.name,
+        }
+        with self._lock:
+            self._lanes = lanes
+            self._meta = meta
+
+    # -- introspection --------------------------------------------------
+    @property
+    def records(self) -> list[TaskRecord]:
+        with self._lock:
+            return list(self._records)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._records.clear()
+            self._lanes = {}
+
+    def makespan(self) -> float:
+        """Measured makespan: last record end − first record start."""
+        recs = self.records
+        if not recs:
+            return 0.0
+        return max(r.end for r in recs) - min(r.start for r in recs)
+
+    def bin_busy(self) -> dict[str, float]:
+        """Busy seconds per bin label (device tasks only)."""
+        busy: dict[str, float] = {}
+        for r in self.records:
+            if r.bin is not None:
+                busy[r.bin] = busy.get(r.bin, 0.0) + r.duration
+        return busy
+
+    # -- export ---------------------------------------------------------
+    def trace(self) -> dict[str, Any]:
+        """The versioned JSON-serializable trace dict."""
+        recs = self.records
+        t0 = min((r.start for r in recs), default=0.0)
+        with self._lock:
+            lanes = {k: dict(v) for k, v in self._lanes.items()}
+            meta = dict(self._meta)
+        # lane timestamps share the records' perf_counter clock; rebase
+        # them onto the same t=0 origin as the records
+        for snap in lanes.values():
+            for field in ("first_dispatch_ts", "last_dispatch_ts",
+                          "last_retire_ts"):
+                if snap.get(field) is not None:
+                    snap[field] -= t0
+        return {
+            "version": TRACE_VERSION,
+            "meta": meta,
+            "records": [
+                {
+                    "node": r.node_id, "name": r.name, "type": r.type,
+                    "bin": r.bin, "worker": r.worker,
+                    "iteration": r.iteration,
+                    "start": r.start - t0, "end": r.end - t0,
+                    "cost": r.cost, "bytes": r.bytes,
+                }
+                for r in recs
+            ],
+            "lanes": lanes,
+        }
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.trace(), f, indent=1)
+
+    # The executor stamps timestamps itself (one clock for all workers);
+    # exposed so tests and external callers agree on the clock used.
+    clock = staticmethod(time.perf_counter)
+
+
+def load_trace(path: str) -> dict[str, Any]:
+    """Load a saved trace, validating the format version."""
+    with open(path) as f:
+        trace = json.load(f)
+    v = trace.get("version")
+    if v != TRACE_VERSION:
+        raise ValueError(f"unsupported trace version {v!r} in {path} "
+                         f"(expected {TRACE_VERSION})")
+    return trace

@@ -23,6 +23,7 @@ Model
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping, Sequence
@@ -40,9 +41,9 @@ class CostModel:
     ``device_speed`` expresses heterogeneity as relative rates per bin
     index (empty = all 1.0); HEFT consumes the same model, so its
     decisions optimize exactly what :func:`simulate` measures.  The
-    defaults are deliberately round numbers — the simulator ranks
-    policies, it does not predict wall-clock (cost-model calibration
-    from real runs is a roadmap item).
+    defaults are deliberately round numbers that *rank* policies; to
+    *predict* wall-clock, calibrate from a recorded executor run with
+    :meth:`fit` (profile-guided loop, docs/scheduling.md).
     """
 
     compute_rate: float = 1e6        # kernel cost units / second at speed 1
@@ -85,6 +86,75 @@ class CostModel:
                       if src is not None else 0)
             return self.latency_s + nbytes / self.h2d_bandwidth
         return self.host_time_s
+
+    # ------------------------------------------------------------------
+    # calibration from recorded runs (StarPU-style history-based model)
+    # ------------------------------------------------------------------
+    @classmethod
+    def fit(cls, trace: Any, *, base: "CostModel | None" = None,
+            ) -> "CostModel":
+        """Calibrate a model from a recorded executor trace.
+
+        ``trace`` is a :class:`~repro.sched.profile.TaskProfiler`, or the
+        dict its ``trace()`` method / ``profile.load_trace`` produce.
+        Returns a copy of ``base`` (default: a fresh :class:`CostModel`)
+        with the parameters the trace can pin down replaced:
+
+        * ``compute_rate`` — total kernel cost units / total kernel
+          seconds (aggregate, so simulated totals reproduce measured
+          totals even when per-node cost attributions are noisy);
+        * ``device_speed`` — per-bin kernel rate relative to the global
+          rate, in trace ``meta.bins`` order (bins without kernel
+          records keep speed 1.0);
+        * ``h2d_bandwidth`` / ``latency_s`` — from pull/push records:
+          latency is the cheapest observed transfer, bandwidth makes the
+          remaining time account for the bytes moved;
+        * ``host_time_s`` — mean host-task duration.
+
+        Parameters the trace cannot observe (``d2d_bandwidth`` — the
+        executor never issues device-to-device copies directly) keep the
+        ``base`` values.
+        """
+        if hasattr(trace, "trace"):
+            trace = trace.trace()
+        base = base or cls()
+        records = trace.get("records", ())
+        updates: dict[str, Any] = {}
+
+        kernels = [r for r in records if r["type"] == "kernel"]
+        k_cost = sum(r["cost"] for r in kernels)
+        k_secs = sum(r["end"] - r["start"] for r in kernels)
+        if k_cost > 0 and k_secs > 0:
+            rate = k_cost / k_secs
+            updates["compute_rate"] = rate
+            bins = list(trace.get("meta", {}).get("bins", ()))
+            if bins:
+                speeds = []
+                for label in bins:
+                    bc = sum(r["cost"] for r in kernels if r["bin"] == label)
+                    bs = sum(r["end"] - r["start"] for r in kernels
+                             if r["bin"] == label)
+                    speeds.append((bc / bs) / rate if bc > 0 and bs > 0
+                                  else 1.0)
+                updates["device_speed"] = tuple(speeds)
+
+        xfers = [r for r in records if r["type"] in ("pull", "push")]
+        if xfers:
+            durations = [max(r["end"] - r["start"], 1e-9) for r in xfers]
+            latency = min(durations)
+            updates["latency_s"] = latency
+            total_bytes = sum(r["bytes"] for r in xfers)
+            if total_bytes > 0:
+                beyond = max(sum(durations) - latency * len(durations), 1e-9)
+                updates["h2d_bandwidth"] = total_bytes / beyond
+
+        hosts = [r for r in records
+                 if r["type"] in ("host", "placeholder")]
+        if hosts:
+            updates["host_time_s"] = (
+                sum(r["end"] - r["start"] for r in hosts) / len(hosts))
+
+        return dataclasses.replace(base, **updates)
 
 
 @dataclass

@@ -18,7 +18,7 @@ import itertools
 import threading
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -12,9 +12,9 @@ real HBM bytes for capacity planning against the per-device budget.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-from ..core.memory import BuddyAllocator, OutOfMemory
+from ..core.memory import BuddyAllocator
 
 
 def _pow2_ceil(x: int) -> int:

@@ -7,7 +7,6 @@ peak activation memory is one microbatch deep (pairs with remat).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax

@@ -1,0 +1,94 @@
+"""benchmarks/sched_bench.py CI gate: JSON artifact + baseline check.
+
+The simulator is deterministic, so the checked-in baseline must
+reproduce exactly on every host — the regression check is a pure unit
+concern, covered here rather than only in the workflow."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+
+import sched_bench
+
+
+def _payload(heft_ms):
+    return {
+        "version": 1, "bins": 3, "speeds": [], "host_workers": 4,
+        "makespan_s": {shape: {"heft": v} for shape, v in heft_ms.items()},
+    }
+
+
+def test_check_baseline_passes_within_tolerance():
+    base = _payload({"chain": 1.0, "fanout": 2.0})
+    cur = _payload({"chain": 1.05, "fanout": 1.9})   # +5% / improvement
+    assert sched_bench.check_baseline(cur, base) == []
+
+
+def test_check_baseline_flags_regression_and_mismatch():
+    base = _payload({"chain": 1.0, "fanout": 2.0})
+    cur = _payload({"chain": 2.0, "fanout": 2.0})    # 2x regression
+    failures = sched_bench.check_baseline(cur, base)
+    assert len(failures) == 1 and "chain" in failures[0]
+    assert "+100.0%" in failures[0]
+
+    missing = _payload({"fanout": 2.0})              # shape not run
+    assert any("no heft result" in f
+               for f in sched_bench.check_baseline(missing, base))
+
+    mismatched = dict(cur, bins=4)                   # incomparable config
+    assert any("config mismatch" in f
+               for f in sched_bench.check_baseline(mismatched, base))
+
+
+def test_sched_bench_gate_green_against_checked_in_baseline(tmp_path):
+    """The repo's committed baseline must reproduce bit-for-bit, and the
+    --json artifact must carry the gated numbers."""
+    out = tmp_path / "BENCH_sched.json"
+    rc = sched_bench.main(["--random-seeds", "2",
+                           "--json", str(out),
+                           "--check-baseline"])
+    assert rc == 0
+    data = json.loads(out.read_text())
+    assert data["version"] == 1
+    baseline = json.loads(
+        open(sched_bench.DEFAULT_BASELINE).read())
+    for shape, pols in baseline["makespan_s"].items():
+        assert data["makespan_s"][shape]["heft"] == pols["heft"]
+
+
+def test_sched_bench_gate_fails_on_injected_regression(tmp_path):
+    """Acceptance: --check-baseline exits non-zero when the current heft
+    makespan is a 2x regression (injected by halving the baseline)."""
+    with open(sched_bench.DEFAULT_BASELINE) as f:
+        baseline = json.load(f)
+    for shape in baseline["makespan_s"]:
+        baseline["makespan_s"][shape]["heft"] /= 2.0
+    doctored = tmp_path / "baseline.json"
+    doctored.write_text(json.dumps(baseline))
+    rc = sched_bench.main(["--random-seeds", "2",
+                           "--check-baseline", str(doctored)])
+    assert rc == 1
+
+
+def test_sched_bench_gate_reports_corrupt_baseline(tmp_path):
+    """Malformed baseline JSON takes the clean gate-failure path (exit 1
+    with a diagnostic row), not a raw traceback."""
+    bad = tmp_path / "bad.json"
+    bad.write_text("{this is not json")
+    rc = sched_bench.main(["--shapes", "chain", "--policies", "heft",
+                           "--check-baseline", str(bad)])
+    assert rc == 1
+
+
+def test_sched_bench_write_baseline_roundtrip(tmp_path):
+    """--write-baseline emits a file the gate immediately passes against
+    (the documented refresh procedure)."""
+    path = tmp_path / "new_baseline.json"
+    assert sched_bench.main(["--random-seeds", "2",
+                             "--write-baseline", str(path)]) == 0
+    written = json.loads(path.read_text())
+    assert set(written["makespan_s"]) == set(sched_bench.SHAPES)
+    assert all(set(p) == {"heft"} for p in written["makespan_s"].values())
+    assert sched_bench.main(["--random-seeds", "2",
+                             "--check-baseline", str(path)]) == 0

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import SHAPES, get_config, list_archs, reduced
+from repro.configs import get_config, list_archs, reduced
 from repro.models import (decode_step, forward, init_cache, init_params,
                           loss_fn, prefill)
 from repro.models.frontends import make_patch_embeds

@@ -4,7 +4,6 @@ import numpy as np
 from _hypothesis_compat import given, settings, st
 
 from repro.core import Heteroflow, UnionFind, place
-from repro.core.graph import TaskType
 
 
 def test_union_find_basics():

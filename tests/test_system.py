@@ -13,7 +13,6 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.core import Executor, Heteroflow
 from repro.data import SyntheticSource
-from repro.models import init_params
 from repro.training import (AdamWConfig, checkpoint, init_train_state,
                             make_train_step, wsd_schedule)
 
