@@ -25,7 +25,22 @@ from typing import Any, Sequence
 import jax
 
 __all__ = ["DispatchLane", "ScopedDeviceContext", "LaneRegistry",
-           "device_key", "bin_labels", "dedup_labels"]
+           "device_key", "bin_labels", "dedup_labels",
+           "COPY_LANE", "COMPUTE_LANE", "DEFAULT_LANE_DEPTH"]
+
+#: Lane classes a device bin multiplexes, mirroring the paper's per-device
+#: streams: one lane serializes memory ops (H2D pulls / D2H pushes), one
+#: serializes kernel launches.  ``repro.sched.simulator`` models exactly
+#: these two lanes per bin.
+COPY_LANE = "copy"
+COMPUTE_LANE = "compute"
+
+#: Default number of concurrently-in-flight ops a bin admits.  With one
+#: copy lane and one compute lane each serializing their own class, depth
+#: 2 means a transfer may overlap a kernel (the paper's stream overlap,
+#: Heteroflow §IV); depth 1 degenerates to fully serialized dispatch —
+#: the conservative model the simulator used before lanes existed.
+DEFAULT_LANE_DEPTH = 2
 
 
 def device_key(device: Any) -> str:
@@ -76,6 +91,7 @@ class DispatchLane:
         self._inflight: deque = deque()
         self.dispatched = 0
         self.retired = 0
+        self.max_depth = 0            # in-flight high-watermark
         self.first_dispatch_ts: float | None = None
         self.last_dispatch_ts: float | None = None
         self.last_retire_ts: float | None = None
@@ -91,6 +107,7 @@ class DispatchLane:
         with self._lock:
             self._inflight.append(token)
             self.dispatched += 1
+            self.max_depth = max(self.max_depth, len(self._inflight))
             if self.first_dispatch_ts is None:
                 self.first_dispatch_ts = now
             self.last_dispatch_ts = now
@@ -136,6 +153,7 @@ class DispatchLane:
             return {
                 "key": self.key,
                 "depth": len(self._inflight),
+                "max_depth": self.max_depth,
                 "dispatched": self.dispatched,
                 "retired": self.retired,
                 "first_dispatch_ts": self.first_dispatch_ts,

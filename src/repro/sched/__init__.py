@@ -15,6 +15,12 @@ Policies: ``balanced`` (seed Algorithm 1), ``heft``, ``round_robin``,
 ``random``.  ``Executor(scheduler="heft")`` selects one at runtime;
 ``configs.SchedConfig`` is the config-file knob.  See docs/scheduling.md.
 
+The simulator models each bin as a copy lane ∥ compute lane pair
+(``CostModel.lane_depth``, mirroring ``core.streams``), so H2D/D2H
+transfers overlap kernels the way the paper's per-worker streams do;
+``simulate(..., replay=trace)`` reconstructs a recorded executor run and
+reports the prediction's divergence from the measured makespan.
+
 Profile-guided loop (``sched.profile``): run with
 ``Executor(profiler=TaskProfiler())``, fit a calibrated model via
 ``CostModel.fit(profiler)``, and feed it back through
@@ -30,7 +36,14 @@ from .base import (
     register,
 )
 from .policies import BalancedBins, Heft, RandomPolicy, RoundRobin
-from .profile import TaskProfiler, TaskRecord, load_trace, node_bytes
+from .profile import (
+    TaskProfiler,
+    TaskRecord,
+    cross_bin_bytes,
+    load_trace,
+    node_bytes,
+    producer_bytes,
+)
 from .simulator import CostModel, SimReport, simulate
 
 __all__ = [
@@ -39,4 +52,5 @@ __all__ = [
     "BalancedBins", "Heft", "RoundRobin", "RandomPolicy",
     "CostModel", "SimReport", "simulate",
     "TaskProfiler", "TaskRecord", "load_trace", "node_bytes",
+    "producer_bytes", "cross_bin_bytes",
 ]

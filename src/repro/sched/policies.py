@@ -123,7 +123,11 @@ class Heft(Scheduler):
        from already-placed cross-group predecessors.
 
     The same :class:`CostModel` drives the simulator, so HEFT optimizes
-    the metric ``sched.simulator.simulate`` measures.
+    the metric ``sched.simulator.simulate`` measures — including the
+    lane model: with ``lane_depth >= 2`` each bin's availability is
+    tracked per lane (copy vs. compute), so EFT sees a group's H2D pulls
+    overlapping another group's kernel exactly the way the overlapped
+    simulator charges them.
     """
 
     name = "heft"
@@ -185,37 +189,52 @@ class Heft(Scheduler):
         # cost units to seconds by the same rule EFT charges for kernels.
         # Per the Scheduler contract, initial_load shares cost_fn's units
         # (arena bytes under the default byte-based cost metric; rescaled
-        # cost units from reschedule's measured-load path).
-        free = [bin_load(initial_load, bins, i)
-                / (model.compute_rate * (model.speed(i) or 1.0))
-                for i in range(n_bins)]
+        # cost units from reschedule's measured-load path).  Availability
+        # is tracked per LANE when the model overlaps (lane_depth >= 2):
+        # a group's pulls queue on the copy lane, its kernels on the
+        # compute lane — the same two clocks the simulator advances.
+        overlap = model.lane_depth >= 2
+        copy_free = [bin_load(initial_load, bins, i)
+                     / (model.compute_rate * (model.speed(i) or 1.0))
+                     for i in range(n_bins)]
+        compute_free = list(copy_free) if overlap else copy_free
         finish: dict[Hashable, float] = {}
         placed: dict[Hashable, int] = {}
         assignment: dict[Hashable, int] = {}
         for g in sorted(groups, key=lambda g: (-group_rank[g.root], g.order)):
             pinned = self._pinned_index(g, bins)
-            best_idx, best_eft = 0, float("inf")
+            best: tuple[int, float, float, float] | None = None
             candidates = range(n_bins) if pinned is None else (pinned,)
+            # pull time is bandwidth-bound — identical on every candidate
+            pull_t = sum(model.node_time(t) for t in g.nodes
+                         if t.type == TaskType.PULL)
             for i in candidates:
-                ready = free[i]
+                data_ready = 0.0
                 for (pg, nbytes) in preds[g.root]:
                     if pg not in placed:
                         continue  # predecessor group not yet ranked-ahead
                     t_avail = finish[pg]
                     if placed[pg] != i:
                         t_avail += model.transfer_time(nbytes)
-                    ready = max(ready, t_avail)
+                    data_ready = max(data_ready, t_avail)
                 # node_time scales only kernels by speed — the same rule
                 # the simulator charges, so EFT optimizes what it measures
-                exec_cost = sum(model.node_time(t, speed=model.speed(i))
-                                for t in g.nodes)
-                eft = ready + exec_cost
-                if eft < best_eft:
-                    best_idx, best_eft = i, eft
-            assignment[g.root] = best_idx
-            placed[g.root] = best_idx
-            finish[g.root] = best_eft
-            free[best_idx] = best_eft
+                kern_t = sum(model.node_time(t, speed=model.speed(i))
+                             for t in g.nodes if t.type != TaskType.PULL)
+                copy_done = (max(data_ready, copy_free[i]) + pull_t
+                             if pull_t > 0 else data_ready)
+                eft = (max(copy_done, compute_free[i]) + kern_t
+                       if kern_t > 0 else max(copy_done, copy_free[i]))
+                if best is None or eft < best[1]:
+                    best = (i, eft, copy_done, kern_t)
+            idx, eft, copy_done, kern_t = best
+            assignment[g.root] = idx
+            placed[g.root] = idx
+            finish[g.root] = eft
+            if pull_t > 0:
+                copy_free[idx] = copy_done
+            if kern_t > 0 or not overlap:
+                compute_free[idx] = eft
         return assignment
 
 

@@ -17,25 +17,33 @@ heteroflow executor:
   simulator *predicts* measured makespans instead of merely ranking
   policies.
 
-Trace format (``version`` 1)::
+Trace format (``version`` 2)::
 
     {
-      "version": 1,
+      "version": 2,
       "meta": {"bins": ["cpu:0#0", "cpu:0#1"], "workers": 4,
                "policy": "heft"},
       "records": [
         {"node": 17, "name": "k3", "type": "kernel", "bin": "cpu:0#1",
          "worker": 2, "iteration": 0, "start": 0.0012, "end": 0.0034,
-         "cost": 250.0, "bytes": 0},
+         "cost": 250.0, "bytes": 0, "xfer_bytes": 4096},
         ...
       ],
       "lanes": {"cpu:0": {"dispatched": 96, "retired": 96, "depth": 0,
-                          "first_dispatch_ts": ..., "last_retire_ts": ...}}
+                          "max_depth": 3, "first_dispatch_ts": ...,
+                          "last_retire_ts": ...}}
     }
 
 ``start``/``end`` are seconds on a shared monotonic clock, rebased so the
 first record starts at 0 when the trace is exported (raw perf-counter
 values are meaningless across processes).
+
+Version 2 adds ``xfer_bytes`` per kernel record — the bytes of operands
+resident on a *different* bin than the kernel's own at invoke time
+(cross-bin device-to-device traffic), which ``CostModel.fit`` uses to
+calibrate ``d2d_bandwidth`` — and the lanes' ``max_depth`` in-flight
+high-watermark.  Version-1 traces still load; readers treat the missing
+field as 0.
 """
 from __future__ import annotations
 
@@ -48,9 +56,12 @@ from typing import Any
 from repro.core.graph import Node, TaskType
 from repro.core.placement import _nbytes
 
-__all__ = ["TaskRecord", "TaskProfiler", "node_bytes", "load_trace"]
+__all__ = ["TaskRecord", "TaskProfiler", "node_bytes", "producer_bytes",
+           "cross_bin_bytes", "load_trace"]
 
-TRACE_VERSION = 1
+TRACE_VERSION = 2
+#: versions load_trace accepts (v1 lacks xfer_bytes; readers default it 0)
+SUPPORTED_TRACE_VERSIONS = (1, 2)
 
 
 def node_bytes(node: Node) -> int:
@@ -70,6 +81,34 @@ def node_bytes(node: Node) -> int:
     return 0
 
 
+def producer_bytes(node: Node) -> int:
+    """Bytes a downstream consumer on *another bin* would have to move.
+
+    Pulls produce their host span; kernels forward the largest of their
+    source pulls' spans (the span-size estimate Algorithm 1's default
+    cost metric uses — shared with ``CostModel.out_bytes``)."""
+    if node.type == TaskType.PULL:
+        return _nbytes(node.state.get("source"), node.state.get("size"))
+    if node.type == TaskType.KERNEL:
+        srcs = node.state.get("sources", ())
+        return max((producer_bytes(s) for s in srcs), default=0)
+    return 0
+
+
+def cross_bin_bytes(node: Node) -> int:
+    """Bytes of ``node``'s predecessors resident on a different bin.
+
+    Only kernels can see cross-bin operands (affinity grouping co-places
+    a kernel with its own pulls, so cross-bin edges are kernel→kernel
+    dependencies between groups).  Recorded per kernel in version-2
+    traces as ``xfer_bytes`` — the observable ``d2d_bandwidth``
+    calibration signal."""
+    if node.type != TaskType.KERNEL or node.bin_key is None:
+        return 0
+    return sum(producer_bytes(d) for d in node.dependents
+               if d.bin_key is not None and d.bin_key != node.bin_key)
+
+
 @dataclass(frozen=True)
 class TaskRecord:
     """One executed node: what ran, where, and for how long."""
@@ -84,6 +123,7 @@ class TaskRecord:
     end: float
     cost: float                # abstract cost (executor's cost_fn)
     bytes: int
+    xfer_bytes: int = 0        # cross-bin operand bytes (kernels, v2)
 
     @property
     def duration(self) -> float:
@@ -119,6 +159,7 @@ class TaskProfiler:
             end=end,
             cost=cost,
             bytes=node_bytes(node),
+            xfer_bytes=cross_bin_bytes(node),
         )
         with self._lock:
             self._records.append(rec)
@@ -194,6 +235,7 @@ class TaskProfiler:
                     "iteration": r.iteration,
                     "start": r.start - t0, "end": r.end - t0,
                     "cost": r.cost, "bytes": r.bytes,
+                    "xfer_bytes": r.xfer_bytes,
                 }
                 for r in recs
             ],
@@ -210,11 +252,14 @@ class TaskProfiler:
 
 
 def load_trace(path: str) -> dict[str, Any]:
-    """Load a saved trace, validating the format version."""
+    """Load a saved trace, validating the format version.
+
+    Version 1 (no per-kernel ``xfer_bytes``) still loads — consumers
+    default the field to 0, so d2d calibration is simply skipped."""
     with open(path) as f:
         trace = json.load(f)
     v = trace.get("version")
-    if v != TRACE_VERSION:
+    if v not in SUPPORTED_TRACE_VERSIONS:
         raise ValueError(f"unsupported trace version {v!r} in {path} "
-                         f"(expected {TRACE_VERSION})")
+                         f"(expected one of {SUPPORTED_TRACE_VERSIONS})")
     return trace

@@ -1,25 +1,47 @@
 """Discrete-event simulator for heteroflow graphs (estee-style).
 
 Scores a placement *offline*: no JAX devices, no threads, no wall-clock —
-just device clocks advanced by a :class:`CostModel`.  This is the tool
+just resource clocks advanced by a :class:`CostModel`.  This is the tool
 the scheduler study needs (estee, "Analysis of workflow schedulers in
 simulated distributed environments"): policies are compared on simulated
 makespan / utilization over synthetic graphs before any hardware run.
 
 Model
 -----
-* Every **pull/kernel** node is serialized on its assigned device bin
-  (one dispatch lane per bin, matching ``core.streams``).
-* **host/push/placeholder** nodes run on a host pool of
-  ``host_workers`` CPU workers (the executor's work-stealing pool,
-  abstracted to its concurrency level).
+* Every device bin multiplexes **two lanes**, mirroring the paper's
+  per-device streams (``core.streams``): a **copy lane** serializing
+  memory ops (H2D pulls, D2H pushes) and a **compute lane** serializing
+  kernels.  With ``CostModel.lane_depth >= 2`` (the default,
+  ``core.streams.DEFAULT_LANE_DEPTH``) the two lanes run concurrently,
+  so transfers overlap compute — the overlap the paper's speedups come
+  from (Heteroflow §IV).  ``lane_depth=1`` collapses both lanes into one
+  serialized queue per bin (the pre-lane conservative model).
+* Every task — device or host — additionally occupies one slot of a
+  bounded **worker pool** (``host_workers``) for its duration, matching
+  the executor's work-stealing threads: a one-worker executor serializes
+  everything regardless of lanes, and the simulator reproduces that.
+* **host/placeholder** nodes use a worker slot only.
 * A dependency crossing two different bins charges a transfer:
   ``latency + bytes / d2d_bandwidth``, with bytes estimated from the
   producer's ``_nbytes`` (the same span-size estimate Algorithm 1's
-  default cost metric uses).
+  default cost metric uses).  ``d2d_bandwidth`` is calibrated by
+  :meth:`CostModel.fit` from the cross-bin byte counts version-2 traces
+  record per kernel.
 * Ready tasks are dispatched FIFO per resource with deterministic
   ``(arrival, node.id)`` tie-breaking — two runs over the same graph and
   placement are bit-identical.
+
+Trace replay
+------------
+``simulate(..., replay=trace)`` reconstructs a recorded executor run:
+node durations (and bin assignments, when resolvable) come from the
+trace's measured records instead of the cost model, the worker-pool size
+comes from ``meta.workers``, and cross-bin transfer charges are skipped
+(measured kernel durations already embed them).  The returned report
+carries the trace's measured makespan so callers can assert the
+simulator's prediction lands within tolerance of reality
+(``SimReport.divergence`` — the replay-validation workflow,
+docs/scheduling.md).
 """
 from __future__ import annotations
 
@@ -30,6 +52,9 @@ from typing import Any, Callable, Mapping, Sequence
 
 from repro.core.graph import Heteroflow, Node, TaskType
 from repro.core.placement import _nbytes, estimate_node_cost
+from repro.core.streams import COMPUTE_LANE, COPY_LANE, DEFAULT_LANE_DEPTH
+
+from .profile import producer_bytes
 
 __all__ = ["CostModel", "SimReport", "simulate"]
 
@@ -40,10 +65,13 @@ class CostModel:
 
     ``device_speed`` expresses heterogeneity as relative rates per bin
     index (empty = all 1.0); HEFT consumes the same model, so its
-    decisions optimize exactly what :func:`simulate` measures.  The
-    defaults are deliberately round numbers that *rank* policies; to
-    *predict* wall-clock, calibrate from a recorded executor run with
-    :meth:`fit` (profile-guided loop, docs/scheduling.md).
+    decisions optimize exactly what :func:`simulate` measures.
+    ``lane_depth`` selects the per-bin dispatch model: ``>= 2`` lets the
+    copy lane overlap the compute lane (paper streams), ``1`` serializes
+    each bin.  The defaults are deliberately round numbers that *rank*
+    policies; to *predict* wall-clock, calibrate from a recorded
+    executor run with :meth:`fit` (profile-guided loop,
+    docs/scheduling.md).
     """
 
     compute_rate: float = 1e6        # kernel cost units / second at speed 1
@@ -52,6 +80,7 @@ class CostModel:
     latency_s: float = 5e-6          # per-transfer fixed cost
     host_time_s: float = 1e-5        # host / placeholder task duration
     device_speed: tuple[float, ...] = ()
+    lane_depth: int = DEFAULT_LANE_DEPTH
     cost_fn: Callable[[Node], float] = estimate_node_cost
 
     def speed(self, bin_index: int) -> float:
@@ -61,12 +90,7 @@ class CostModel:
 
     def out_bytes(self, node: Node) -> int:
         """Bytes a downstream consumer on another bin would transfer."""
-        if node.type == TaskType.PULL:
-            return _nbytes(node.state.get("source"), node.state.get("size"))
-        if node.type == TaskType.KERNEL:
-            srcs = node.state.get("sources", ())
-            return max((self.out_bytes(s) for s in srcs), default=0)
-        return 0
+        return producer_bytes(node)
 
     def transfer_time(self, nbytes: int) -> float:
         if nbytes <= 0:
@@ -109,11 +133,18 @@ class CostModel:
         * ``h2d_bandwidth`` / ``latency_s`` — from pull/push records:
           latency is the cheapest observed transfer, bandwidth makes the
           remaining time account for the bytes moved;
+        * ``d2d_bandwidth`` — from kernels with cross-bin inputs
+          (version-2 traces record ``xfer_bytes`` per kernel): the
+          duration in excess of the fitted compute time is attributed to
+          moving those bytes between bins.  Traces without cross-bin
+          kernel records (single-bin runs, version-1 traces) keep the
+          ``base`` value;
         * ``host_time_s`` — mean host-task duration.
 
-        Parameters the trace cannot observe (``d2d_bandwidth`` — the
-        executor never issues device-to-device copies directly) keep the
-        ``base`` values.
+        The compute-rate fit deliberately excludes cross-bin kernels
+        (their durations embed transfer time, which would bias the rate
+        low and then double-count against ``d2d_bandwidth``), unless the
+        trace has *only* cross-bin kernels.
         """
         if hasattr(trace, "trace"):
             trace = trace.trace()
@@ -122,23 +153,28 @@ class CostModel:
         updates: dict[str, Any] = {}
 
         kernels = [r for r in records if r["type"] == "kernel"]
-        k_cost = sum(r["cost"] for r in kernels)
-        k_secs = sum(r["end"] - r["start"] for r in kernels)
+        local = [r for r in kernels if not r.get("xfer_bytes", 0)]
+        rate_pool = local or kernels
+        k_cost = sum(r["cost"] for r in rate_pool)
+        k_secs = sum(r["end"] - r["start"] for r in rate_pool)
+        rate = None
+        speeds: list[float] = []
+        bins = list(trace.get("meta", {}).get("bins", ()))
         if k_cost > 0 and k_secs > 0:
             rate = k_cost / k_secs
             updates["compute_rate"] = rate
-            bins = list(trace.get("meta", {}).get("bins", ()))
             if bins:
-                speeds = []
                 for label in bins:
-                    bc = sum(r["cost"] for r in kernels if r["bin"] == label)
-                    bs = sum(r["end"] - r["start"] for r in kernels
+                    bc = sum(r["cost"] for r in rate_pool
+                             if r["bin"] == label)
+                    bs = sum(r["end"] - r["start"] for r in rate_pool
                              if r["bin"] == label)
                     speeds.append((bc / bs) / rate if bc > 0 and bs > 0
                                   else 1.0)
                 updates["device_speed"] = tuple(speeds)
 
         xfers = [r for r in records if r["type"] in ("pull", "push")]
+        latency = base.latency_s
         if xfers:
             durations = [max(r["end"] - r["start"], 1e-9) for r in xfers]
             latency = min(durations)
@@ -147,6 +183,23 @@ class CostModel:
             if total_bytes > 0:
                 beyond = max(sum(durations) - latency * len(durations), 1e-9)
                 updates["h2d_bandwidth"] = total_bytes / beyond
+
+        # d2d: excess kernel time over the fitted compute time, attributed
+        # to the cross-bin bytes those kernels pulled from other bins
+        cross = [r for r in kernels if r.get("xfer_bytes", 0) > 0]
+        if cross and rate:
+            def bin_speed(label: str) -> float:
+                if label in bins and len(speeds) == len(bins):
+                    return speeds[bins.index(label)] or 1.0
+                return 1.0
+            excess = sum(
+                max((r["end"] - r["start"])
+                    - r["cost"] / (rate * bin_speed(r["bin"])), 0.0)
+                for r in cross)
+            d2d_bytes = sum(r["xfer_bytes"] for r in cross)
+            beyond = excess - latency * len(cross)
+            if d2d_bytes > 0 and beyond > 0:
+                updates["d2d_bandwidth"] = d2d_bytes / beyond
 
         hosts = [r for r in records
                  if r["type"] in ("host", "placeholder")]
@@ -162,20 +215,91 @@ class SimReport:
     """Outcome of one simulated run."""
 
     makespan: float
-    busy: dict[int, float]                  # bin index -> busy seconds
+    #: bin index -> busy seconds summed over BOTH lanes (work conserved
+    #: across lane modes; may exceed makespan when copy overlaps compute)
+    busy: dict[int, float]
     utilization: dict[int, float]           # bin index -> busy / makespan
     host_busy: float
     n_transfers: int
     transfer_seconds: float
+    lane_busy: dict[int, dict[str, float]] = field(repr=False,
+                                                   default_factory=dict)
     finish_times: dict[int, float] = field(repr=False, default_factory=dict)
+    #: (node_id, lane_kind, bin_index, start, end) per executed node;
+    #: lane_kind is "copy"/"compute"/"host" (bin_index -1 for host).
+    #: Property tests verify feasibility + lane capacity from this.
+    schedule: list = field(repr=False, default_factory=list)
+    #: measured wall-clock makespan of the replayed trace (replay mode
+    #: only) — compare against ``makespan`` via :attr:`divergence`.
+    measured_makespan: float | None = None
+
+    @property
+    def divergence(self) -> float | None:
+        """Relative error of the simulated vs. the replayed measured
+        makespan; None outside replay mode."""
+        if self.measured_makespan is None or self.measured_makespan <= 0:
+            return None
+        return (self.makespan - self.measured_makespan) / self.measured_makespan
 
     def summary(self) -> str:
         util = "/".join(f"{u:.2f}" for _, u in sorted(self.utilization.items()))
-        return (f"makespan={self.makespan * 1e3:.3f}ms util={util} "
-                f"transfers={self.n_transfers}")
+        out = (f"makespan={self.makespan * 1e3:.3f}ms util={util} "
+               f"transfers={self.n_transfers}")
+        if self.divergence is not None:
+            out += (f" measured={self.measured_makespan * 1e3:.3f}ms "
+                    f"divergence={self.divergence:+.1%}")
+        return out
 
 
-_HOST = -1  # resource key for the host pool
+_HOST = -1  # bin index for the worker-pool-only resource
+_HOST_LANE = "host"
+
+#: node type -> lane class on its bin
+_LANE_OF = {TaskType.PULL: COPY_LANE, TaskType.PUSH: COPY_LANE,
+            TaskType.KERNEL: COMPUTE_LANE}
+
+
+class _Replay:
+    """Measured durations / bins / concurrency from a recorded trace."""
+
+    def __init__(self, trace: Any, bins: Sequence[Any]):
+        if hasattr(trace, "trace"):
+            trace = trace.trace()
+        self.meta = trace.get("meta", {})
+        labels = list(self.meta.get("bins", ()))
+        records = trace.get("records", ())
+        sums: dict[str, float] = {}
+        counts: dict[str, int] = {}
+        self.bin_of: dict[str, int] = {}
+        spans: dict[Any, tuple[float, float]] = {}   # iteration -> (t0, t1)
+        node_of: dict[str, Any] = {}
+        for r in records:
+            name = r["name"]
+            # replay matches by name (ids differ across graph rebuilds);
+            # user-supplied duplicate names would silently merge nodes
+            if node_of.setdefault(name, r.get("node")) != r.get("node"):
+                raise ValueError(
+                    f"trace replay needs unique node names, but "
+                    f"{name!r} covers two distinct nodes")
+            sums[name] = sums.get(name, 0.0) + (r["end"] - r["start"])
+            counts[name] = counts.get(name, 0) + 1
+            if r.get("bin") in labels:
+                idx = labels.index(r["bin"])
+                if idx < len(bins):
+                    self.bin_of[name] = idx
+            it = r.get("iteration", 0)
+            t0, t1 = spans.get(it, (r["start"], r["end"]))
+            spans[it] = (min(t0, r["start"]), max(t1, r["end"]))
+        self.duration = {n: sums[n] / counts[n] for n in sums}
+        # durations are averaged per node across iterations, so the
+        # simulation predicts ONE graph pass — compare it against the
+        # mean per-iteration measured span, not the whole-trace span
+        # (a trace covering N runs would otherwise read as ~-(1-1/N)
+        # divergence regardless of model quality)
+        self.measured_makespan = (
+            sum(t1 - t0 for t0, t1 in spans.values()) / len(spans)
+            if spans else 0.0)
+        self.workers = self.meta.get("workers")
 
 
 def simulate(
@@ -185,66 +309,103 @@ def simulate(
     *,
     cost_model: CostModel | None = None,
     host_workers: int = 4,
+    replay: Any = None,
 ) -> SimReport:
     """Simulate ``graph`` under a ``{node.id: bin}`` placement.
 
     ``placement`` is exactly what ``Scheduler.schedule`` (or the legacy
-    ``core.placement.place``) returns; nodes absent from it (host/push)
-    run on the host pool.
+    ``core.placement.place``) returns; nodes absent from it (host)
+    run on the worker pool only.  Pushes ride the copy lane of their
+    source pull's bin (D2H).  ``replay`` reconstructs a recorded run
+    instead of consulting the cost model — see the module docstring.
     """
     model = cost_model or CostModel()
+    overlap = model.lane_depth >= 2
     order = graph.topological_order()
     if order is None:
         raise ValueError(f"graph '{graph.name}' contains a cycle")
     if graph.empty():
         return SimReport(0.0, {}, {}, 0.0, 0, 0.0)
+    rp = _Replay(replay, bins) if replay is not None else None
+    if rp is not None and rp.workers:
+        host_workers = rp.workers
 
     idx_of_bin: dict[int, int] = {id(b): i for i, b in enumerate(bins)}
 
-    def resource(n: Node) -> int:
+    def placed_index(n: Node) -> int:
+        b = placement.get(n.id)
+        if b is None:
+            raise ValueError(f"device task '{n.name}' missing from placement")
+        i = idx_of_bin.get(id(b))
+        if i is None:  # equality fallback (string/sharding bins)
+            i = next((j for j, bb in enumerate(bins) if bb == b), None)
+            if i is None:
+                raise ValueError(f"'{n.name}' placed on unknown bin {b!r}")
+        return i
+
+    def resource(n: Node) -> tuple[str, int]:
+        """(lane kind, bin index) a node occupies beside its worker."""
+        if rp is not None and n.name in rp.bin_of \
+                and n.type in (TaskType.KERNEL, TaskType.PULL):
+            return _LANE_OF[n.type], rp.bin_of[n.name]
         if n.type in (TaskType.KERNEL, TaskType.PULL):
-            b = placement.get(n.id)
-            if b is None:
-                raise ValueError(f"device task '{n.name}' missing from placement")
-            i = idx_of_bin.get(id(b))
-            if i is None:  # equality fallback (string/sharding bins)
-                i = next((j for j, bb in enumerate(bins) if bb == b), None)
-                if i is None:
-                    raise ValueError(f"'{n.name}' placed on unknown bin {b!r}")
-            return i
-        return _HOST
+            return _LANE_OF[n.type], placed_index(n)
+        if n.type == TaskType.PUSH:
+            src = n.state.get("src")
+            if src is not None:
+                if rp is not None and src.name in rp.bin_of:
+                    return COPY_LANE, rp.bin_of[src.name]
+                if placement.get(src.id) is not None:
+                    return COPY_LANE, placed_index(src)
+            return _HOST_LANE, _HOST
+        return _HOST_LANE, _HOST
 
     res_of = {n.id: resource(n) for n in graph.nodes}
+
+    def duration(n: Node, bin_index: int) -> float:
+        if rp is not None and n.name in rp.duration:
+            return rp.duration[n.name]
+        speed = model.speed(bin_index) if bin_index != _HOST else 1.0
+        return model.node_time(n, speed=speed)
 
     # -- event loop ----------------------------------------------------
     pending = {n.id: len(n.dependents) for n in graph.nodes}
     arrival: dict[int, float] = {}
     finish: dict[int, float] = {}
-    free_at = [0.0] * len(bins)
-    host_free = [0.0] * max(1, host_workers)
-    heapq.heapify(host_free)
+    # per-bin lane clocks; with lane_depth < 2 both names alias ONE list,
+    # so copies and kernels serialize against each other (legacy model)
+    copy_free = [0.0] * len(bins)
+    compute_free = copy_free if not overlap else [0.0] * len(bins)
+    lane_clock = {COPY_LANE: copy_free, COMPUTE_LANE: compute_free}
+    workers = [0.0] * max(1, host_workers)
+    heapq.heapify(workers)
     busy = {i: 0.0 for i in range(len(bins))}
+    lane_busy = {i: {COPY_LANE: 0.0, COMPUTE_LANE: 0.0}
+                 for i in range(len(bins))}
     host_busy = 0.0
     n_transfers = 0
     transfer_seconds = 0.0
+    schedule: list[tuple[int, str, int, float, float]] = []
     events: list[tuple[float, int]] = []          # (finish_time, node.id)
     node_by_id = {n.id: n for n in graph.nodes}
 
     def dispatch(n: Node, ready_t: float) -> None:
         nonlocal host_busy
-        r = res_of[n.id]
-        if r == _HOST:
-            wfree = heapq.heappop(host_free)
+        kind, b = res_of[n.id]
+        dur = duration(n, b)
+        wfree = heapq.heappop(workers)
+        if kind == _HOST_LANE:
             start = max(ready_t, wfree)
-            dur = model.node_time(n)
-            heapq.heappush(host_free, start + dur)
             host_busy += dur
         else:
-            start = max(ready_t, free_at[r])
-            dur = model.node_time(n, speed=model.speed(r))
-            free_at[r] = start + dur
-            busy[r] += dur
+            lane = lane_clock[kind]
+            start = max(ready_t, wfree, lane[b])
+            lane[b] = start + dur
+            busy[b] += dur
+            lane_busy[b][kind] += dur
+        heapq.heappush(workers, start + dur)
         finish[n.id] = start + dur
+        schedule.append((n.id, kind, b, start, start + dur))
         heapq.heappush(events, (start + dur, n.id))
 
     # sources dispatch at t=0 in node-id order (deterministic)
@@ -262,11 +423,12 @@ def simulate(
         # successors in id order so equal-time readiness ties are stable
         for s in sorted(n.successors, key=lambda s: s.id):
             comm = 0.0
-            rn, rs = res_of[nid], res_of[s.id]
-            if rn != _HOST and rs != _HOST and rn != rs:
-                comm = model.transfer_time(model.out_bytes(n))
+            (kn, bn), (ks, bs) = res_of[nid], res_of[s.id]
+            if bn != _HOST and bs != _HOST and bn != bs:
                 n_transfers += 1
-                transfer_seconds += comm
+                if rp is None:  # replayed durations already embed transfers
+                    comm = model.transfer_time(model.out_bytes(n))
+                    transfer_seconds += comm
             arrival[s.id] = max(arrival.get(s.id, 0.0), t + comm)
             pending[s.id] -= 1
             if pending[s.id] == 0:
@@ -283,5 +445,8 @@ def simulate(
         host_busy=host_busy,
         n_transfers=n_transfers,
         transfer_seconds=transfer_seconds,
+        lane_busy=lane_busy,
         finish_times=finish,
+        schedule=schedule,
+        measured_makespan=rp.measured_makespan if rp is not None else None,
     )

@@ -50,7 +50,8 @@ def test_sched_bench_gate_green_against_checked_in_baseline(tmp_path):
                            "--check-baseline"])
     assert rc == 0
     data = json.loads(out.read_text())
-    assert data["version"] == 1
+    assert data["version"] == 2
+    assert data["lane_depth"] >= 2          # overlapped model is the gate
     baseline = json.loads(
         open(sched_bench.DEFAULT_BASELINE).read())
     for shape, pols in baseline["makespan_s"].items():

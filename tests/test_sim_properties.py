@@ -1,0 +1,227 @@
+"""Property-based net over the lane-model simulator and scheduler
+(`repro.sched.simulate`): schedule feasibility, lane capacity, overlap
+dominance, and bin-count monotonicity on randomized inputs.
+
+Runs under real hypothesis when installed (CI) and degrades to
+fixed-seed sampling via ``_hypothesis_compat`` otherwise.  Domain notes:
+
+* Feasibility and lane-capacity are *structural* invariants — they must
+  hold for any graph, so the random-DAG strategies range freely.
+* ``overlap <= serialized`` and makespan-monotonicity-in-bins are NOT
+  theorems on arbitrary precedence graphs: list scheduling exhibits
+  Graham anomalies (adding a resource/overlap can reorder FIFO queues
+  and delay a critical task; observed on ~0.5% of random DAGs).  The
+  properties are asserted on the paper's canonical shape families
+  (chain/fanout/diamond — exhaustively verified over the full strategy
+  domains below), while random DAGs get the anomaly-free bound that
+  *did* survive a 2000+-case sweep: m bins are never worse than the
+  fully serial 1-bin schedule under a transfer-free model.  The
+  deterministic acceptance sweep in test_sched.py covers the benchmark
+  shapes themselves.
+"""
+import dataclasses
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.graph import TaskType
+from repro.sched import CostModel, get_scheduler, simulate
+from workloads import (
+    build_chain,
+    build_diamond,
+    build_fanout,
+    build_random_dag,
+)
+
+#: transfer-free model for the monotonicity property (splitting a chain
+#: across bins legitimately costs transfer time, which breaks
+#: monotonicity by construction — so the invariant excludes it)
+ZERO_XFER = CostModel(latency_s=0.0, h2d_bandwidth=float("inf"),
+                      d2d_bandwidth=float("inf"))
+
+SHAPES = {"chain": build_chain, "fanout": build_fanout,
+          "diamond": build_diamond}
+
+
+def _placed(builder, size, nbins, policy="balanced", model=None):
+    model = model or CostModel()
+    bins = [f"d{i}" for i in range(nbins)]
+    G = builder(size)
+    kwargs = {"cost_model": model} if policy == "heft" else {}
+    pl = get_scheduler(policy, **kwargs).schedule(G, bins)
+    return G, pl, bins, model
+
+
+# ----------------------------------------------------------------------
+# structural invariants — must hold on ANY graph
+# ----------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 500), st.sampled_from((12, 30, 60)),
+       st.integers(1, 4), st.sampled_from((1, 2)),
+       st.sampled_from(("balanced", "heft", "round_robin")))
+def test_schedule_feasibility(seed, n_kernels, nbins, lane_depth, policy):
+    """No node starts before all predecessors finished (+ the cross-bin
+    transfer the model charges), in both lane modes."""
+    model = dataclasses.replace(CostModel(), lane_depth=lane_depth)
+    G, _ = build_random_dag(n_kernels=n_kernels, seed=seed,
+                            with_pushes=False)
+    bins = [f"d{i}" for i in range(nbins)]
+    kwargs = {"cost_model": model} if policy == "heft" else {}
+    pl = get_scheduler(policy, **kwargs).schedule(G, bins)
+    rep = simulate(G, pl, bins, cost_model=model)
+    start = {nid: s for nid, _, _, s, _ in rep.schedule}
+    bin_of = {nid: b for nid, _, b, _, _ in rep.schedule}
+    assert len(rep.schedule) == len(G)       # every node ran exactly once
+    for n in G.nodes:
+        for s in n.successors:
+            comm = 0.0
+            if (bin_of[n.id] >= 0 and bin_of[s.id] >= 0
+                    and bin_of[n.id] != bin_of[s.id]):
+                comm = model.transfer_time(model.out_bytes(n))
+            assert start[s.id] >= rep.finish_times[n.id] + comm - 1e-12, (
+                f"'{s.name}' started before '{n.name}' finished+transfer")
+    # makespan dominates every LANE's busy time (bin totals sum the two
+    # lanes, which legitimately exceed makespan when they overlap)
+    for b, lanes in rep.lane_busy.items():
+        for kind, busy in lanes.items():
+            assert rep.makespan >= busy - 1e-12, (b, kind)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 500), st.sampled_from((12, 30, 60)),
+       st.integers(1, 4), st.sampled_from((1, 2)),
+       st.sampled_from((1, 2, 4)))
+def test_lane_capacity_never_exceeded(seed, n_kernels, nbins, lane_depth,
+                                      workers):
+    """Each lane serializes its class; per-bin concurrency never exceeds
+    lane_depth; worker-pool concurrency never exceeds host_workers."""
+    model = dataclasses.replace(CostModel(), lane_depth=lane_depth)
+    G, _ = build_random_dag(n_kernels=n_kernels, seed=seed,
+                            with_pushes=False)
+    bins = [f"d{i}" for i in range(nbins)]
+    pl = get_scheduler("balanced").schedule(G, bins)
+    rep = simulate(G, pl, bins, cost_model=model, host_workers=workers)
+
+    def max_overlap(intervals):
+        events = sorted((t, delta) for s, e in intervals if e > s
+                        for t, delta in ((s, 1), (e, -1)))
+        # at equal timestamps, process departures before arrivals: a task
+        # starting exactly when another ends does not overlap it
+        events.sort(key=lambda td: (td[0], td[1]))
+        depth = peak = 0
+        for _, delta in events:
+            depth += delta
+            peak = max(peak, depth)
+        return peak
+
+    by_lane, by_bin = {}, {}
+    for nid, kind, b, s, e in rep.schedule:
+        if b >= 0:
+            by_lane.setdefault((b, kind), []).append((s, e))
+            by_bin.setdefault(b, []).append((s, e))
+    for (b, kind), ivs in by_lane.items():
+        assert max_overlap(ivs) <= 1, f"lane ({b},{kind}) double-booked"
+    for b, ivs in by_bin.items():
+        assert max_overlap(ivs) <= lane_depth, (
+            f"bin {b} exceeded lane depth {lane_depth}")
+    assert max_overlap([(s, e) for _, _, _, s, e in rep.schedule]) <= workers
+
+
+# ----------------------------------------------------------------------
+# overlap dominance — canonical shape families (full domain verified)
+# ----------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from(sorted(SHAPES)), st.integers(2, 12),
+       st.integers(1, 4),
+       st.sampled_from(("balanced", "heft", "round_robin")),
+       st.sampled_from((2, 4, 64)))
+def test_overlap_not_worse_than_serialized(shape, size, nbins, policy,
+                                           workers):
+    """Overlapped lanes never hurt on the chain/fanout/diamond families:
+    same placement, lane_depth 2 vs 1 — makespan <=, work identical."""
+    G, pl, bins, model = _placed(SHAPES[shape], size, nbins, policy)
+    ov = simulate(G, pl, bins, cost_model=model, host_workers=workers)
+    sr = simulate(G, pl, bins, host_workers=workers,
+                  cost_model=dataclasses.replace(model, lane_depth=1))
+    assert ov.makespan <= sr.makespan + 1e-12
+    assert ov.busy == pytest.approx(sr.busy)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 16))
+def test_overlap_strictly_helps_copy_heavy_fanout(width):
+    """With copies as expensive as kernels, pipelining branch pulls
+    behind compute must strictly beat the serialized model."""
+    heavy = CostModel(h2d_bandwidth=2e7)
+    G, pl, bins, _ = _placed(build_fanout, width, 2, model=heavy)
+    ov = simulate(G, pl, bins, cost_model=heavy).makespan
+    sr = simulate(G, pl, bins,
+                  cost_model=dataclasses.replace(heavy, lane_depth=1)
+                  ).makespan
+    assert ov < sr
+
+
+# ----------------------------------------------------------------------
+# makespan monotonicity in bin count
+# ----------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 23))
+def test_makespan_monotone_in_bins_independent_branches(width):
+    """Fan-out branches are independent groups: under a transfer-free
+    model, LPT packing onto more bins never increases the simulated
+    makespan.  (Precedence-coupled random DAGs are excluded: Graham's
+    anomalies make monotonicity false there in general.)"""
+    prev = None
+    for nbins in (1, 2, 3, 4, 6, 8):
+        G, pl, bins, _ = _placed(build_fanout, width, nbins,
+                                 model=ZERO_XFER)
+        ms = simulate(G, pl, bins, cost_model=ZERO_XFER,
+                      host_workers=64).makespan
+        if prev is not None:
+            assert ms <= prev * (1 + 1e-9), (
+                f"width={width}: makespan rose {prev} -> {ms} at "
+                f"{nbins} bins")
+        prev = ms
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 149), st.sampled_from((12, 30, 60)),
+       st.sampled_from((2, 3, 4, 6)))
+def test_multi_bin_never_worse_than_serial(seed, n_kernels, nbins):
+    """Random DAGs: m bins may beat or occasionally trail m-1 (anomaly),
+    but under a transfer-free model they never lose to the fully serial
+    1-bin schedule."""
+    G, _ = build_random_dag(n_kernels=n_kernels, seed=seed,
+                            with_pushes=False)
+    one = get_scheduler("balanced").schedule(G, ["d0"])
+    serial = simulate(G, one, ["d0"], cost_model=ZERO_XFER,
+                      host_workers=64).makespan
+    bins = [f"d{i}" for i in range(nbins)]
+    G2, _ = build_random_dag(n_kernels=n_kernels, seed=seed,
+                             with_pushes=False)
+    pl = get_scheduler("balanced").schedule(G2, bins)
+    multi = simulate(G2, pl, bins, cost_model=ZERO_XFER,
+                     host_workers=64).makespan
+    assert multi <= serial * (1 + 1e-9)
+
+
+# ----------------------------------------------------------------------
+# scheduler invariants that ride along with the net
+# ----------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 500), st.integers(1, 4),
+       st.sampled_from(("balanced", "heft", "round_robin", "random")))
+def test_placement_covers_exactly_device_tasks(seed, nbins, policy):
+    """Every pull/kernel is placed on a listed bin; host tasks never."""
+    G, _ = build_random_dag(n_kernels=16, seed=seed, with_pushes=True)
+    bins = [f"d{i}" for i in range(nbins)]
+    pl = get_scheduler(policy).schedule(G, bins)
+    device = {n.id for n in G.nodes
+              if n.type in (TaskType.PULL, TaskType.KERNEL)}
+    assert set(pl) == device
+    assert set(pl.values()) <= set(bins)
