@@ -121,6 +121,24 @@ def bench_sched_scaling(quick: bool) -> list[str]:
             f"sched_scaling_b{nbins},{measured * 1e6:.0f},"
             f"views={views};sim_us={rep.makespan * 1e6:.0f};"
             f"divergence={rep.divergence:+.3f}")
+    # mesh-bin curve (repro.sched.bins): the same fig6-style axis, but
+    # the bin pool is one synthetic NxM mesh slice + two device bins and
+    # the workload carries capability-tagged sharded kernels — simulated
+    # only (slices wider than the host's device count cannot execute
+    # here), showing HEFT exploit the slice as it widens
+    from benchmarks.sched_bench import parse_bins
+    from benchmarks.workloads import build_sharded_stack
+    from repro.sched import CostModel, get_scheduler
+    model = CostModel()
+    for tile in ("1x1", "2x1", "2x2"):
+        bins = parse_bins(f"mesh:{tile}")     # same pool the gate sweeps
+        G = build_sharded_stack()
+        pl = get_scheduler("heft", cost_model=model).schedule(G, bins)
+        rep = simulate(G, pl, bins, cost_model=model)
+        rows.append(
+            f"sched_scaling_mesh_{tile},{rep.makespan * 1e6:.0f},"
+            f"slice_devices={bins[0].device_count};"
+            f"sim_only=1;policy=heft")
     return rows
 
 

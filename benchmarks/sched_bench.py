@@ -11,6 +11,13 @@ the overlap gain — no JAX devices involved, runs on any CPU-only host
     PYTHONPATH=src python benchmarks/sched_bench.py --bins 4 \
         --speeds 1.0,1.0,0.5,0.5 --shapes fanout,diamond
 
+``--bins mesh:NxM`` swaps the homogeneous device pool for a mixed
+execution-bin pool (one synthetic NxM ``MeshBin`` slice + two device
+bins, ``repro.sched.bins``) and adds the ``sharded`` shape, whose
+``requires={"mesh"}`` kernels only the mesh slice may run; two extra
+check rows gate capability eligibility and the slice's advantage over
+a single-device slice (see docs/scheduling.md "Execution bins").
+
 ``--measure`` additionally executes every cell on the real executor
 (one JAX-device bin per simulated bin), fits a ``CostModel`` from the
 recorded trace, and appends measured wall-clock + the fitted
@@ -50,10 +57,17 @@ from benchmarks.workloads import (
     build_diamond,
     build_fanout,
     build_random_dag,
+    build_sharded_stack,
 )
 from repro.configs import DEFAULT_SCHED
 from repro.core.streams import DEFAULT_LANE_DEPTH
-from repro.sched import CostModel, RandomPolicy, get_scheduler, simulate
+from repro.sched import (
+    CostModel,
+    MeshBin,
+    RandomPolicy,
+    get_scheduler,
+    simulate,
+)
 
 SHAPES = {
     "chain": lambda: build_chain(n=12),
@@ -62,6 +76,12 @@ SHAPES = {
     "random_dag": lambda: build_random_dag(n_kernels=96, seed=7,
                                            with_pushes=False)[0],
 }
+#: shapes needing a MeshBin in the bin list (capability-tagged kernels);
+#: swept only under ``--bins mesh:NxM``
+MESH_SHAPES = {
+    "sharded": lambda: build_sharded_stack(n_sharded=4, width=6),
+}
+ALL_SHAPES = {**SHAPES, **MESH_SHAPES}
 POLICIES = ("balanced", "heft", "round_robin", "random")
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
@@ -72,7 +92,7 @@ GATED_POLICY = "heft"
 REGRESSION_RTOL = 0.10
 
 
-def score(policy_name: str, shape: str, bins: list[str], model: CostModel,
+def score(policy_name: str, shape: str, bins: list, model: CostModel,
           random_seeds: int, host_workers: int,
           ) -> tuple[float, float, dict[int, float]]:
     """Mean simulated makespan (s) under the overlapped lane model, the
@@ -84,7 +104,7 @@ def score(policy_name: str, shape: str, bins: list[str], model: CostModel,
         serials: list[float] = []
         util_sum: dict[int, float] = {i: 0.0 for i in range(len(bins))}
         for s in range(random_seeds):
-            G = SHAPES[shape]()
+            G = ALL_SHAPES[shape]()
             pl = RandomPolicy(seed=s).schedule(G, bins)
             rep = simulate(G, pl, bins, cost_model=model,
                            host_workers=host_workers)
@@ -96,13 +116,37 @@ def score(policy_name: str, shape: str, bins: list[str], model: CostModel,
         n = len(makespans)
         return (sum(makespans) / n, sum(serials) / n,
                 {i: u / n for i, u in util_sum.items()})
-    G = SHAPES[shape]()
+    G = ALL_SHAPES[shape]()
     kwargs = {"cost_model": model} if policy_name == "heft" else {}
     pl = get_scheduler(policy_name, **kwargs).schedule(G, bins)
     rep = simulate(G, pl, bins, cost_model=model, host_workers=host_workers)
     serial = simulate(G, pl, bins, cost_model=serial_model,
                       host_workers=host_workers).makespan
     return rep.makespan, serial, rep.utilization
+
+
+def parse_bins(spec: str) -> list:
+    """Build the bin list from ``--bins``.
+
+    ``"3"`` → three simulated device bins (the legacy sweep).
+    ``"mesh:2x2"`` → a synthetic 2×2 MeshBin slice plus two device bins
+    — the mixed pool the ``sharded`` shape's capability-tagged kernels
+    need (only the MeshBin may run them).
+    """
+    if spec.isdigit():
+        return [f"d{i}" for i in range(int(spec))]
+    if spec.startswith("mesh:"):
+        dims = [int(x) for x in spec[5:].split("x") if x]
+        if not dims or any(d < 1 for d in dims):
+            raise ValueError(f"bad mesh shape in --bins {spec!r}")
+        shape = {f"ax{i}": d for i, d in enumerate(dims)}
+        return [MeshBin(f"{spec}[0]", shape), "d0", "d1"]
+    raise ValueError(
+        f"--bins must be an integer or mesh:NxM, got {spec!r}")
+
+
+def has_mesh_bin(bins: list) -> bool:
+    return any(getattr(b, "kind", None) == "mesh" for b in bins)
 
 
 def measure(policy_name: str, shape: str, n_bins: int, workers: int,
@@ -118,7 +162,7 @@ def measure(policy_name: str, shape: str, n_bins: int, workers: int,
 
     bins = [jax.devices()[0]] * n_bins
     prof = TaskProfiler()
-    G = SHAPES[shape]()
+    G = ALL_SHAPES[shape]()
     sched = get_scheduler(policy_name,
                           **({"seed": 0} if policy_name == "random" else {}))
     with Executor(num_workers=workers, devices=bins, scheduler=sched,
@@ -194,8 +238,11 @@ def check_baseline(payload: dict, baseline: dict, *,
 
 def main(argv: list[str] | None = None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    p.add_argument("--bins", type=int, default=3,
-                   help="simulated device bin count")
+    p.add_argument("--bins", default="3",
+                   help="simulated device bin count, or mesh:NxM for a "
+                        "mixed pool of one NxM mesh-slice bin plus two "
+                        "device bins (adds the 'sharded' shape whose "
+                        "capability-tagged kernels only MeshBins may run)")
     p.add_argument("--speeds",
                    default=",".join(str(s) for s in DEFAULT_SCHED.device_speed),
                    help="comma-separated relative speed per bin "
@@ -235,10 +282,23 @@ def main(argv: list[str] | None = None) -> int:
                               if args.speeds else ())
     except ValueError:
         p.error(f"--speeds must be comma-separated floats, got {args.speeds!r}")
-    bins = [f"d{i}" for i in range(args.bins)]
+    try:
+        bins = parse_bins(args.bins)
+    except ValueError as e:
+        p.error(str(e))
+    mesh = has_mesh_bin(bins)
+    if args.measure and mesh:
+        p.error("--measure runs on real JAX devices; mesh:NxM bins are "
+                "simulator-only")
     model = CostModel(device_speed=args.parsed_speeds,
                       lane_depth=args.lane_depth)
     shapes = [s for s in args.shapes.split(",") if s]
+    if mesh and args.shapes == p.get_default("shapes"):
+        shapes.append("sharded")        # the mesh pool's signature shape
+    bad_shapes = [s for s in shapes if s in MESH_SHAPES and not mesh]
+    if bad_shapes:
+        p.error(f"shapes {bad_shapes} carry mesh-tagged kernels; run "
+                f"them with --bins mesh:NxM")
     policies = [s for s in args.policies.split(",") if s]
 
     results: dict[tuple[str, str], float] = {}
@@ -260,12 +320,16 @@ def main(argv: list[str] | None = None) -> int:
             row = (f"{shape},{pol},{ms * 1e3:.4f},{serial * 1e3:.4f},"
                    f"{gain:+.3f},{utils[(shape, pol)]:.3f},{per_bin}")
             if args.measure:
-                wall, pred = measure(pol, shape, args.bins,
+                wall, pred = measure(pol, shape, len(bins),
                                      args.measure_workers)
                 div = (pred - wall) / wall if wall > 0 else 0.0
                 row += (f",{wall * 1e3:.4f},{pred * 1e3:.4f},{div:+.3f}")
             print(row, flush=True)
 
+    # baseline payloads keep the legacy integer bin count; mesh pools
+    # record their spec string (config mismatch vs an int baseline is
+    # exactly right — the sweeps are not comparable)
+    args.bins = int(args.bins) if args.bins.isdigit() else args.bins
     payload = results_payload(args, results, utils)
     if args.json:
         with open(args.json, "w") as f:
@@ -296,6 +360,32 @@ def main(argv: list[str] | None = None) -> int:
             ok &= good
             print(f"check,heft_beats_random_{shape},{verdict},"
                   f"heft={h * 1e3:.4f}ms,random={r * 1e3:.4f}ms")
+    if mesh and "sharded" in shapes and "heft" in policies:
+        from repro.sched import build_groups
+
+        # capability eligibility: every mesh-tagged group on a MeshBin
+        G = ALL_SHAPES["sharded"]()
+        pl = get_scheduler("heft", cost_model=model).schedule(G, bins)
+        tagged = [g for g in build_groups(G) if "mesh" in g.requires]
+        placed_ok = bool(tagged) and all(
+            getattr(pl[g.nodes[0].id], "kind", None) == "mesh"
+            for g in tagged)
+        ok &= placed_ok
+        print(f"check,mesh_tagged_only_on_mesh_bins,"
+              f"{'PASS' if placed_ok else 'FAIL'},tagged_groups={len(tagged)}")
+        # slice advantage: the NxM slice must beat (or tie) the same
+        # pool with a single-device slice — HEFT exploiting the mesh
+        single = [MeshBin("mesh:1x1[0]", {"ax0": 1}), "d0", "d1"]
+        G1 = ALL_SHAPES["sharded"]()
+        pl1 = get_scheduler("heft", cost_model=model).schedule(G1, single)
+        ms_single = simulate(G1, pl1, single, cost_model=model,
+                             host_workers=args.host_workers).makespan
+        ms_mesh = results[("sharded", "heft")]
+        good = ms_mesh <= ms_single * (1 + 1e-9)
+        ok &= good
+        print(f"check,mesh_slice_not_worse_than_single_device,"
+              f"{'PASS' if good else 'FAIL'},"
+              f"slice={ms_mesh * 1e3:.4f}ms,single={ms_single * 1e3:.4f}ms")
     if args.lane_depth >= 2:
         # stream overlap must never hurt on these shapes (test_sched.py
         # pins the same condition).  The hard gate applies only to the
@@ -304,7 +394,7 @@ def main(argv: list[str] | None = None) -> int:
         # hit Graham list-scheduling anomalies, so there the row is
         # advisory (WARN) and does not flip the exit code.
         default_cfg = all(
-            getattr(args, k) == p.get_default(k)
+            str(getattr(args, k)) == str(p.get_default(k))
             for k in ("bins", "speeds", "host_workers", "lane_depth",
                       "random_seeds"))
         bad = [(s, p_) for (s, p_), ms in results.items()

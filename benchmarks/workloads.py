@@ -20,6 +20,9 @@ Synthetic **scheduler-study shapes** (consumed by
 * :func:`build_random_dag` — seeded layered random DAG, executable end to
   end (each sink pushes into a host buffer, so results can be compared
   across placement policies).
+* :func:`build_sharded_stack` — untagged branches plus heavy kernels
+  tagged ``requires={"mesh"}``: the mixed-eligibility shape for the
+  execution-bin study (``sched_bench.py --bins mesh:NxM``).
 
 All four give every kernel its *own* pull task so Algorithm 1's affinity
 phase yields one group per kernel — the policy under study, not the
@@ -128,14 +131,17 @@ def build_detailed_placement(n_iters: int, n_cells: int = 256):
 # ----------------------------------------------------------------------
 # scheduler-study shapes (simulator + executor stress workloads)
 # ----------------------------------------------------------------------
-def _stage_kernel(G, name, cost, nbytes, *dep_kernels, rng=None):
+def _stage_kernel(G, name, cost, nbytes, *dep_kernels, rng=None,
+                  requires=()):
     """One kernel with its own pull (own affinity group); consumes the
-    device outputs of ``dep_kernels`` plus its pulled array."""
+    device outputs of ``dep_kernels`` plus its pulled array.
+    ``requires`` forwards capability tags (``repro.sched.bins``)."""
     data = (rng.normal(size=nbytes // 8) if rng is not None
             else np.full(nbytes // 8, 1.0)).astype(np.float64)
     p = G.pull(data, name=f"pull_{name}")
     fn = lambda own, *deps: sum(deps, 0.0 * own[0]) + float(np.asarray(own).sum())  # noqa: E731
-    k = G.kernel(fn, p, *dep_kernels, cost=cost, name=name)
+    k = G.kernel(fn, p, *dep_kernels, cost=cost, name=name,
+                 requires=requires)
     k.succeed(p)
     for d in dep_kernels:
         k.succeed(d)
@@ -208,6 +214,33 @@ def build_steal_stress(width: int = 50, nbytes: int = 1024):
             k = G.kernel(lambda own, r: float(np.asarray(own).sum()) + r,
                          p, roots[b], cost=1.0, name=f"k_b{b}_{i}")
             k.succeed(p, roots[b])
+    return G
+
+
+def build_sharded_stack(n_sharded: int = 4, width: int = 6,
+                        sharded_cost: float = 800.0,
+                        branch_cost: float = 100.0, nbytes: int = 1024):
+    """Mixed single-device + mesh-sharded workload (`repro.sched.bins`).
+
+    A root kernel fans out to ``width`` untagged branches (costs c, 2c,
+    …, placeable on any bin) and ``n_sharded`` heavy kernels tagged
+    ``requires={"mesh"}`` — pjit-sharded stages only a ``MeshBin``
+    slice may run, the way StarPU restricts a CUDA codelet to CUDA
+    workers.  A final untagged join consumes everything.  This is the
+    shape where HEFT visibly exploits slices: the sharded kernels run
+    ``device_count``× faster on a wider slice while the untagged
+    branches soak up the single-device bins (and idle slice members).
+    """
+    G = Heteroflow("sharded_stack")
+    root = _stage_kernel(G, "root", branch_cost / 2, nbytes)
+    tails = []
+    for i in range(width):
+        tails.append(_stage_kernel(G, f"branch{i}", branch_cost * (i + 1),
+                                   nbytes, root))
+    for i in range(n_sharded):
+        tails.append(_stage_kernel(G, f"sharded{i}", sharded_cost, nbytes,
+                                   root, requires=("mesh",)))
+    _stage_kernel(G, "join", branch_cost / 2, nbytes, *tails)
     return G
 
 

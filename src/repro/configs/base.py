@@ -205,15 +205,19 @@ class SchedConfig:
     Profile-guided knobs (docs/scheduling.md "profile → fit → re-place"):
     ``steal_locality`` toggles the executor's locality-aware work
     stealing; ``replace_every`` (> 0) re-invokes the scheduler between
-    graph iterations using measured per-bin load; ``trace_path``, when
-    set, records a ``sched.TaskProfiler`` trace there for offline
-    ``CostModel.fit`` calibration.
+    graph iterations using measured per-bin load; ``migrate_top_k``
+    (> 0) switches those re-placements from full repacking to hot-group
+    migration (move at most k hottest groups; near-equal loads keep the
+    placement); ``trace_path``, when set, records a
+    ``sched.TaskProfiler`` trace there for offline ``CostModel.fit``
+    calibration.
     """
     policy: str = "balanced"
     host_workers: int = 4
     device_speed: tuple[float, ...] = ()
     steal_locality: bool = True
     replace_every: int = 0
+    migrate_top_k: int = 0
     trace_path: str = ""
 
 

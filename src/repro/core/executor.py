@@ -118,8 +118,12 @@ class Executor:
     Parameters
     ----------
     num_workers: CPU worker threads (default: cpu count).
-    devices: device bins for Algorithm-1 placement — ``jax.Device``s,
-        shardings, or sub-mesh objects (default: ``jax.devices()``).
+    devices: execution bins for Algorithm-1 placement — ``jax.Device``s,
+        shardings, or ``repro.sched.bins`` execution bins
+        (``DeviceBin`` / ``HostBin`` / ``MeshBin`` sub-mesh slices;
+        default: ``jax.devices()``).  Capability-tagged kernels
+        (``requires={"mesh"}``) are only placed on bins whose
+        capabilities satisfy the tags.
     arena_bytes: if set, a buddy :class:`DeviceArena` of this capacity is
         created per device bin (paper's per-GPU memory pool).
     scheduler: placement policy — a ``repro.sched.Scheduler`` instance or
@@ -139,6 +143,10 @@ class Executor:
         scheduler every N completed iterations, feeding measured per-bin
         busy seconds back through the policy's ``initial_load`` hook
         (dynamic re-placement — the profile-guided loop, online).
+    migrate_top_k: if > 0, re-placement windows migrate at most this
+        many hottest task groups off overloaded bins instead of fully
+        repacking — near-equal loads then keep the placement untouched
+        (no churn), trading global optimality for warm device state.
     """
 
     def __init__(
@@ -152,6 +160,7 @@ class Executor:
         profiler: Any = None,
         steal_locality: bool = True,
         replace_every: int = 0,
+        migrate_top_k: int = 0,
     ):
         from ..sched import get_scheduler  # lazy: sched imports core
         if num_workers is None:
@@ -161,6 +170,9 @@ class Executor:
             raise ValueError("need at least one worker")
         if replace_every < 0:
             raise ValueError("replace_every must be >= 0")
+        if migrate_top_k < 0:
+            raise ValueError("migrate_top_k must be >= 0")
+        self._migrate_top_k = migrate_top_k
         self.devices = list(devices) if devices is not None else list(jax.devices())
         if not self.devices:
             raise ValueError("need at least one device bin")
@@ -477,16 +489,32 @@ class Executor:
             node.state["result"] = node.work()
 
     def _invoke_pull(self, w: _Worker, node: Node) -> None:
-        """H2D: materialize host span, transfer onto the assigned bin."""
+        """H2D: materialize host span, transfer onto the assigned bin.
+
+        Execution bins (``repro.sched.bins``, duck-typed via ``kind``)
+        refine the target: a device bin unwraps to its ``jax.Device``, a
+        mesh bin transfers under its slice ``NamedSharding`` (replicated
+        by default, the group's pspec context when set), and a host bin
+        keeps the span host-resident — no transfer at all.  An explicit
+        ``sharding=`` pin still overrides everything.
+        """
         host = _span_view(node.state["source"], node.state.get("size"))
         sharding = node.state.get("sharding")
-        target = sharding if sharding is not None else node.device
+        kind = getattr(node.device, "kind", None)
         lane = self.lanes.lane(node.device)
         arena = self.arenas.get(id(node.device))
+        if kind == "host" and sharding is None:
+            node.state["device_data"] = host
+            lane.record(host)
+            return
+        if sharding is not None:
+            target = sharding
+        elif kind is not None:
+            target = node.device.put_target()
+        else:
+            target = node.device
         with ScopedDeviceContext(node.device):
-            if target is not None and not isinstance(target, jax.Device):
-                buf = jax.device_put(host, target)
-            elif isinstance(target, jax.Device):
+            if target is not None:
                 buf = jax.device_put(host, target)
             else:
                 buf = jax.device_put(host)
@@ -639,7 +667,8 @@ class Executor:
         if self.arenas:
             old_device = {n.id: n.device for n in topo.graph.nodes}
         self.scheduler.reschedule(topo.graph, self.devices, self._cost_fn,
-                                  measured_load=measured)
+                                  measured_load=measured,
+                                  migrate_top_k=self._migrate_top_k)
         if self.arenas:
             # a moved pull's arena block belongs to the *old* device; free
             # it so occupancy stays honest and the next pull on the new

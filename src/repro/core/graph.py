@@ -268,6 +268,7 @@ class Heteroflow:
 
     def kernel(self, fn: Callable[..., Any], *args: Any,
                writes: Sequence[PullTask] = (), cost: float | None = None,
+               requires: Sequence[str] = (),
                name: str | None = None) -> KernelTask:
         """Create a kernel task offloading ``fn(*args)`` to a device.
 
@@ -283,12 +284,22 @@ class Heteroflow:
         tasks' device buffers (in order), so downstream ``push`` tasks
         observe the update.  ``cost`` feeds Algorithm 1's balanced-load
         bin packing (default unit load).
+
+        ``requires`` is a set of capability tags restricting placement
+        (StarPU-style codelet eligibility, ``repro.sched.bins``): e.g.
+        ``requires={"mesh"}`` marks a pjit'd sharded kernel that only a
+        mesh-slice bin may run.  The scheduler enforces it for the whole
+        affinity group; an empty set (default) is eligible everywhere.
         """
         node = self._add(TaskType.KERNEL, name)
         sources = [a._node for a in args if isinstance(a, PullTask)]
         node.state.update(fn=fn, args=args, sources=sources, writes=tuple(writes))
         if cost is not None:
             node.state["cost"] = float(cost)
+        if requires:
+            if isinstance(requires, str):       # requires="mesh" is one
+                requires = (requires,)          # tag, not four letters
+            node.state["requires"] = frozenset(requires)
         return KernelTask(node)
 
     # ------------------------------------------------------------------

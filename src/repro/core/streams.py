@@ -46,10 +46,12 @@ DEFAULT_LANE_DEPTH = 2
 def device_key(device: Any) -> str:
     """Stable identifier of a *physical* device bin, usable across runs.
 
-    ``jax.Device`` → ``"platform:id"``; strings pass through; anything
-    else (shardings, sub-meshes) falls back to its repr, which JAX keeps
-    deterministic for a fixed mesh layout.  Profiler traces and
-    ``Executor.stats()['lane_depths']`` key on this instead of the
+    ``jax.Device`` → ``"platform:id"``; strings pass through; execution
+    bins (``repro.sched.bins.ExecutionBin``, duck-typed by their
+    ``kind``/``label`` attributes) carry their own run-stable label;
+    anything else (shardings, sub-meshes) falls back to its repr, which
+    JAX keeps deterministic for a fixed mesh layout.  Profiler traces
+    and ``Executor.stats()['lane_depths']`` key on this instead of the
     enumeration index, so two runs over the same hardware agree on bin
     identities.
     """
@@ -57,6 +59,9 @@ def device_key(device: Any) -> str:
         return f"{device.platform}:{device.id}"
     if isinstance(device, str):
         return device
+    label = getattr(device, "label", None)
+    if label is not None and getattr(device, "kind", None) is not None:
+        return str(label)
     return f"{type(device).__name__}:{device!r}"
 
 
@@ -172,17 +177,33 @@ def _is_ready(token: Any) -> bool:
 
 
 class ScopedDeviceContext(contextlib.AbstractContextManager):
-    """RAII-style device scope (paper Listing 13 line 3)."""
+    """RAII-style device scope (paper Listing 13 line 3).
+
+    Accepts raw ``jax.Device``s, sharding-driven bins (no scope needed —
+    their transfers carry explicit shardings), and execution bins
+    (``repro.sched.bins``): a device bin unwraps to its ``jax.Device``,
+    a mesh bin's pjit'd kernels resolve devices from their operand
+    shardings, and a host bin deliberately runs scope-free.
+    """
 
     def __init__(self, device: Any):
+        kind = getattr(device, "kind", None)
+        self.mesh = device.mesh if kind == "mesh" else None
+        if kind == "device":
+            device = getattr(device, "device", device)
         self.device = device
         self._ctx = None
 
     def __enter__(self):
         # Sub-mesh bins are sharding-driven; only raw Devices can be a
-        # jax.default_device target.
+        # jax.default_device target.  A MeshBin with a live mesh enters
+        # it (the paper's cudaSetDevice scope, slice-wide) so pspec-based
+        # kernels resolve axis names without threading the mesh through.
         if isinstance(self.device, jax.Device):
             self._ctx = jax.default_device(self.device)
+            self._ctx.__enter__()
+        elif self.mesh is not None:
+            self._ctx = self.mesh
             self._ctx.__enter__()
         return self
 

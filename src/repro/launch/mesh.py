@@ -8,6 +8,25 @@ import to fabricate the placeholder devices.
 from __future__ import annotations
 
 import jax
+import numpy as np
+
+
+def _make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Version-tolerant mesh construction.
+
+    Newer jax: ``jax.make_mesh(..., axis_types=AxisType.Auto)``.
+    jax without ``AxisType`` (< 0.5): plain ``jax.make_mesh``.
+    jax without ``make_mesh``: reshape ``jax.devices()`` directly.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    make = getattr(jax, "make_mesh", None)
+    if make is not None and axis_type is not None:
+        return make(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    if make is not None:
+        return make(shape, axes)
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,13 +34,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     2×16×16 (pod, data, model) for the two-pod dry-run."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_smoke_mesh():
     """1×1 mesh over the single real device — smoke tests / examples."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((1, 1), ("data", "model"))

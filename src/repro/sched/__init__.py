@@ -23,8 +23,16 @@ reports the prediction's divergence from the measured makespan.
 
 Profile-guided loop (``sched.profile``): run with
 ``Executor(profiler=TaskProfiler())``, fit a calibrated model via
-``CostModel.fit(profiler)``, and feed it back through
-``Heft.from_trace`` / ``Executor(replace_every=N)``.
+``CostModel.fit(profiler)`` (aggregate + per-kernel-name rates), and
+feed it back through ``Heft.from_trace`` /
+``Executor(replace_every=N, migrate_top_k=k)``.
+
+Execution bins (``sched.bins``): bins are first-class — ``DeviceBin``
+(legacy single device), ``HostBin``, and ``MeshBin`` (a named sub-mesh
+slice with per-member lane pairs and linear sharded-compute scaling).
+``Heteroflow.kernel(..., requires={"mesh"})`` restricts a kernel's
+group to bins offering those capabilities, StarPU-style; v3 traces
+serialize bin descriptors so mesh runs replay faithfully.
 """
 from .base import (
     Scheduler,
@@ -33,7 +41,18 @@ from .base import (
     available_policies,
     build_groups,
     get_scheduler,
+    group_candidates,
     register,
+)
+from .bins import (
+    DeviceBin,
+    ExecutionBin,
+    HostBin,
+    MeshBin,
+    bin_capabilities,
+    bins_from_trace,
+    describe_bin,
+    eligible_bins,
 )
 from .policies import BalancedBins, Heft, RandomPolicy, RoundRobin
 from .profile import (
@@ -48,7 +67,9 @@ from .simulator import CostModel, SimReport, simulate
 
 __all__ = [
     "Scheduler", "TaskGroup", "build_groups", "apply_assignment",
-    "register", "get_scheduler", "available_policies",
+    "register", "get_scheduler", "available_policies", "group_candidates",
+    "ExecutionBin", "DeviceBin", "HostBin", "MeshBin",
+    "bin_capabilities", "eligible_bins", "describe_bin", "bins_from_trace",
     "BalancedBins", "Heft", "RoundRobin", "RandomPolicy",
     "CostModel", "SimReport", "simulate",
     "TaskProfiler", "TaskRecord", "load_trace", "node_bytes",

@@ -29,6 +29,8 @@ from repro.core.graph import Heteroflow, Node, TaskType
 from repro.core.placement import UnionFind, estimate_node_cost
 from repro.core.streams import bin_labels
 
+from .bins import eligible_bins
+
 __all__ = [
     "TaskGroup",
     "Scheduler",
@@ -36,6 +38,7 @@ __all__ = [
     "apply_assignment",
     "bin_index",
     "bin_load",
+    "group_candidates",
     "register",
     "get_scheduler",
     "available_policies",
@@ -58,6 +61,10 @@ class TaskGroup:
     nodes: list[Node] = field(default_factory=list)
     cost: float = 0.0
     pin: Any | None = None
+    #: union of member kernels' capability tags (``requires=`` on
+    #: ``Heteroflow.kernel``): the whole group is only eligible on bins
+    #: whose capabilities superset this (StarPU codelet eligibility).
+    requires: frozenset = frozenset()
 
 
 def build_groups(graph: Heteroflow, cost_fn: CostFn = estimate_node_cost,
@@ -87,6 +94,9 @@ def build_groups(graph: Heteroflow, cost_fn: CostFn = estimate_node_cost,
             g = groups[r] = TaskGroup(root=r, order=len(groups))
         g.nodes.append(t)
         g.cost += cost_fn(t)
+        req = t.state.get("requires")
+        if req:
+            g.requires = g.requires | req
         pin = t.state.get("sharding")
         if pin is not None:
             if g.pin is not None and g.pin is not pin:
@@ -123,6 +133,23 @@ def bin_load(initial_load: Mapping[Any, float] | None, bins: Sequence[Any],
         return float(initial_load.get(bins[i], 0.0))
     except TypeError:          # unhashable bin object
         return 0.0
+
+
+def group_candidates(g: TaskGroup, bins: Sequence[Any]) -> list[int]:
+    """Bin indices ``g`` may be placed on, honoring capability tags.
+
+    Raises when a tagged group has no satisfying bin — a mis-specified
+    bin list is a configuration error, not a silent misplacement (the
+    StarPU rule: a codelet with no eligible worker fails to submit).
+    """
+    idx = eligible_bins(g.requires, bins)
+    if not idx:
+        names = ", ".join(sorted(n.name for n in g.nodes))
+        raise ValueError(
+            f"group [{names}] requires capabilities "
+            f"{sorted(g.requires)} but no bin in {len(bins)} offers them "
+            f"(add a MeshBin/HostBin or drop the tag)")
+    return idx
 
 
 def apply_assignment(
@@ -192,6 +219,7 @@ class Scheduler(abc.ABC):
         cost_fn: CostFn = estimate_node_cost,
         *,
         measured_load: Mapping[Any, float],
+        migrate_top_k: int = 0,
     ) -> dict[int, Any]:
         """Dynamic re-placement between graph iterations.
 
@@ -205,8 +233,24 @@ class Scheduler(abc.ABC):
         up 60% of the measured time starts the new packing with 60% of
         the graph's cost already "resident", steering the next
         iteration's load away from it.
+
+        ``migrate_top_k > 0`` switches from full repacking to **hot-group
+        migration**: keep the current placement and move at most ``k`` of
+        the costliest groups from overloaded bins to underloaded ones —
+        and move *nothing* when loads are already near-equal, so
+        balanced topologies stop churning placement (full repacking
+        re-derives the whole assignment every window, shuffling groups
+        between equally-loaded bins and invalidating warm device
+        state for zero gain).  Falls back to full repacking when the
+        graph carries no prior placement to migrate from.
         """
         groups = build_groups(graph, cost_fn)
+        if migrate_top_k > 0:
+            assignment = self._migrate(groups, bins,
+                                       measured_load=measured_load,
+                                       top_k=migrate_top_k)
+            if assignment is not None:
+                return apply_assignment(graph, groups, bins, assignment)
         total_cost = sum(g.cost for g in groups)
         total_meas = sum(measured_load.values())
         if total_meas > 0 and total_cost > 0:
@@ -216,6 +260,75 @@ class Scheduler(abc.ABC):
             load = dict(measured_load)
         assignment = self.assign(graph, groups, bins, initial_load=load or None)
         return apply_assignment(graph, groups, bins, assignment)
+
+    #: relative spread (max-min over mean measured load) below which
+    #: migration considers bins balanced and keeps the placement as-is
+    MIGRATE_BALANCE_RTOL = 0.25
+
+    def _migrate(self, groups: Sequence[TaskGroup], bins: Sequence[Any],
+                 *, measured_load: Mapping[Any, float], top_k: int,
+                 ) -> dict[Hashable, int] | None:
+        """Move ≤ ``top_k`` hottest groups off the most-loaded bins.
+
+        Returns ``None`` when any group lacks a prior placement (caller
+        falls back to a full repack).  Load is tracked in measured
+        seconds; a group's share of its bin's seconds is estimated by
+        its cost fraction on that bin.  A move only happens when it
+        shrinks the src/dst gap — near-equal loads yield zero moves.
+        """
+        labels = bin_labels(bins)
+        slot = {label: i for i, label in enumerate(labels)}
+        current: dict[Hashable, int] = {}
+        for g in groups:
+            idx = None
+            for t in g.nodes:
+                if t.bin_key in slot:
+                    idx = slot[t.bin_key]
+                    break
+                if t.device is not None:
+                    idx = bin_index(bins, t.device)
+                    if idx is not None:
+                        break
+            if idx is None:
+                return None                     # unplaced → full repack
+            current[g.root] = idx
+        load = {i: bin_load(measured_load, bins, i)
+                for i in range(len(bins))}
+        mean = sum(load.values()) / len(load) if load else 0.0
+        if mean <= 0:
+            return current                      # nothing measured: no churn
+        if (max(load.values()) - min(load.values())) <= \
+                self.MIGRATE_BALANCE_RTOL * mean:
+            return current                      # near-equal: keep placement
+        cost_on = {i: 0.0 for i in range(len(bins))}
+        for g in groups:
+            cost_on[current[g.root]] += g.cost
+        movable = sorted(
+            (g for g in groups if g.pin is None),
+            key=lambda g: (-g.cost, g.order))
+        moved = 0
+        for g in movable:
+            if moved >= top_k:
+                break
+            src = current[g.root]
+            cand = [i for i in group_candidates(g, bins) if i != src]
+            if not cand:
+                continue
+            dst = min(cand, key=lambda i: (load[i], i))
+            if load[src] <= load[dst]:
+                continue                        # g sits on a cool bin
+            # seconds g is responsible for on src, by cost share
+            share = (g.cost / cost_on[src] * load[src]
+                     if cost_on[src] > 0 else 0.0)
+            if share <= 0 or load[src] - load[dst] <= share:
+                continue                        # move would overshoot
+            current[g.root] = dst
+            load[src] -= share
+            load[dst] += share
+            cost_on[src] -= g.cost
+            cost_on[dst] += g.cost
+            moved += 1
+        return current
 
     @abc.abstractmethod
     def assign(

@@ -1,0 +1,333 @@
+"""Execution bins: the resources Algorithm-1 groups are placed onto.
+
+Heteroflow's placement model assumes a bin is one GPU.  At jax_pallas
+production scale a "device" for a pjit'd kernel is the *mesh slice* it
+runs on — so bins become first-class objects with a *kind*, a stable
+label, and a **capability set**, mirroring StarPU's per-architecture
+codelet eligibility (a codelet declaring a CUDA implementation only runs
+on CUDA workers) and Specx's heterogeneous task placement:
+
+* :class:`DeviceBin` — one physical device (the legacy behavior; plain
+  ``jax.Device``/string/sharding bin objects keep working unwrapped and
+  are treated as device bins everywhere).
+* :class:`HostBin`   — host-resident execution: pulls keep their span on
+  the host, kernels run without a device scope.
+* :class:`MeshBin`   — a named sub-mesh slice (axis-name → size shape),
+  enumerated from a ``jax.sharding.Mesh`` via :meth:`MeshBin.from_mesh`
+  or built synthetically for simulator-only studies.  Carries the pspec
+  context pulls need (``put_target`` → a ``NamedSharding`` replicating
+  or sharding over the slice) and a ``device_count`` the policies and
+  simulator use to cost sharded compute.
+
+Capability tags close the loop: ``Heteroflow.kernel(...,
+requires={"mesh"})`` marks a kernel (and, through affinity grouping,
+its whole group) as eligible only on bins whose
+:func:`bin_capabilities` superset the tag set — a sharded pjit kernel
+tagged ``{"mesh"}`` can never be placed on a single-device bin, exactly
+the way StarPU refuses to dispatch a CUDA-only codelet to a CPU worker.
+Untagged groups (the default) remain eligible everywhere.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence
+
+import jax
+
+from repro.core.graph import Node, TaskType
+
+__all__ = [
+    "ExecutionBin", "DeviceBin", "HostBin", "MeshBin",
+    "bin_kind", "bin_capabilities", "bin_lane_width", "bin_compute_scale",
+    "eligible_bins", "node_requires", "mesh_wide",
+    "describe_bin", "bin_from_descriptor", "bins_from_trace",
+]
+
+
+class ExecutionBin:
+    """Base class for first-class bins.
+
+    Subclasses define ``kind`` (``"device"`` / ``"host"`` / ``"mesh"``),
+    a run-stable ``label`` (consumed by ``core.streams.device_key``, so
+    traces and ``Executor.stats()`` key on it), a ``capabilities``
+    frozenset, and ``device_count`` (lane pairs the simulator gives the
+    bin; compute scale for mesh-sharded kernels).
+
+    Bins compare by VALUE (kind + label + shape), like the string bins
+    the simulator sweeps use — a placement built against one
+    ``MeshBin("m", {...})`` resolves against an equal reconstruction
+    (e.g. ``bins_from_trace``).  Two equal bins in one bin list are two
+    scheduling slots, exactly like duplicate devices (``bin_labels``
+    disambiguates their labels positionally; index-keyed loads keep
+    them apart).
+    """
+
+    kind: str = "device"
+    label: str = ""
+    capabilities: frozenset[str] = frozenset({"device"})
+    device_count: int = 1
+
+    def _eq_key(self) -> tuple:
+        return (type(self), self.kind, self.label)
+
+    def __eq__(self, other: Any) -> bool:
+        return (isinstance(other, ExecutionBin)
+                and self._eq_key() == other._eq_key())
+
+    def __hash__(self) -> int:
+        return hash(self._eq_key())
+
+    def put_target(self) -> Any:
+        """Target for ``jax.device_put`` of a pull's span; ``None`` means
+        stay on the host / default device."""
+        return None
+
+    def describe(self) -> dict[str, Any]:
+        """JSON-serializable descriptor (trace v3 ``meta.bin_descriptors``)."""
+        return {"kind": self.kind, "label": self.label,
+                "capabilities": sorted(self.capabilities),
+                "device_count": self.device_count}
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<{type(self).__name__} {self.label!r}>"
+
+
+class DeviceBin(ExecutionBin):
+    """One physical device — the legacy bin, wrapped.
+
+    ``device`` may be a ``jax.Device`` or any placement target the
+    executor already understands (string label for simulation-only use).
+    """
+
+    kind = "device"
+
+    def __init__(self, device: Any, *, label: str | None = None):
+        self.device = device
+        from repro.core.streams import device_key  # local: streams is light
+        self.label = label or device_key(device)
+        platform = (device.platform if isinstance(device, jax.Device)
+                    else None)
+        caps = {"device"}
+        if platform:
+            caps.add(platform)
+        self.capabilities = frozenset(caps)
+
+    def put_target(self) -> Any:
+        return self.device if isinstance(self.device, jax.Device) else None
+
+    def describe(self) -> dict[str, Any]:
+        return {**super().describe(), "kind": "device"}
+
+
+class HostBin(ExecutionBin):
+    """Host-resident execution: no H2D transfer, no device scope."""
+
+    kind = "host"
+
+    def __init__(self, *, label: str = "host"):
+        self.label = label
+        self.capabilities = frozenset({"host"})
+
+    def put_target(self) -> Any:
+        return None
+
+
+class MeshBin(ExecutionBin):
+    """A named sub-mesh slice: ``axis_shape`` maps axis names to sizes.
+
+    ``mesh`` is the real ``jax.sharding.Mesh`` over the slice's devices
+    when the bin is executable; ``None`` marks a *synthetic* bin usable
+    by policies and the simulator only (``sched_bench --bins mesh:NxM``
+    runs on any CPU host this way; handing one to the executor raises
+    at invoke time rather than silently running unsharded).  ``spec``
+    is the default ``PartitionSpec`` context a pull without an explicit
+    ``sharding=`` pin is transferred under (default: replicate over the
+    slice).  Capabilities are ``{"mesh"}`` plus the devices' platform
+    when built over a real mesh; synthetic bins take extra tags via
+    ``capabilities=`` (e.g. ``("tpu",)`` to satisfy platform-qualified
+    kernels in offline studies).
+    """
+
+    kind = "mesh"
+
+    def __init__(self, name: str, axis_shape: Mapping[str, int], *,
+                 mesh: Any = None, spec: Any = None,
+                 capabilities: Sequence[str] = ()):
+        if not axis_shape:
+            raise ValueError("MeshBin needs a non-empty axis_shape")
+        self.label = name
+        self.axis_shape = dict(axis_shape)
+        self.mesh = mesh
+        self.spec = spec
+        self.device_count = 1
+        for n in self.axis_shape.values():
+            self.device_count *= int(n)
+        caps = {"mesh", *capabilities}
+        if mesh is not None:
+            for d in mesh.devices.flat:
+                caps.add(d.platform)
+                break
+        self.capabilities = frozenset(caps)
+
+    def _eq_key(self) -> tuple:
+        return (type(self), self.kind, self.label,
+                tuple(sorted(self.axis_shape.items())))
+
+    @classmethod
+    def from_mesh(cls, mesh: Any, tile: Mapping[str, int] | None = None, *,
+                  spec: Any = None, prefix: str = "mesh") -> list["MeshBin"]:
+        """Enumerate non-overlapping sub-mesh slices of ``mesh``.
+
+        ``tile`` maps axis names to slice sizes (axes omitted keep their
+        full extent); every tile size must divide its axis.  Returns one
+        executable :class:`MeshBin` per slice, in row-major slice order
+        with run-stable labels ``{prefix}:{shape}[{i}]``.
+        """
+        from jax.sharding import Mesh
+
+        names = list(mesh.axis_names)
+        sizes = dict(zip(names, mesh.devices.shape))
+        tile = dict(tile or {})
+        for ax, t in tile.items():
+            if ax not in sizes:
+                raise ValueError(f"mesh has no axis {ax!r} "
+                                 f"(axes: {names})")
+            if sizes[ax] % t:
+                raise ValueError(
+                    f"tile size {t} does not divide axis {ax!r} "
+                    f"of size {sizes[ax]}")
+        shape = {ax: tile.get(ax, sizes[ax]) for ax in names}
+        import itertools as _it
+        steps = [range(0, sizes[ax], shape[ax]) for ax in names]
+        shape_str = "x".join(str(shape[ax]) for ax in names)
+        out = []
+        for i, origin in enumerate(_it.product(*steps)):
+            sl = tuple(slice(o, o + shape[ax])
+                       for o, ax in zip(origin, names))
+            sub = Mesh(mesh.devices[sl], names)
+            out.append(cls(f"{prefix}:{shape_str}[{i}]", shape,
+                           mesh=sub, spec=spec))
+        return out
+
+    def put_target(self) -> Any:
+        if self.mesh is None:
+            # the capability gate makes placement LOOK enforced; running
+            # a sharded kernel unsharded on the default device instead
+            # would be silently wrong — fail loudly at invoke time
+            raise RuntimeError(
+                f"MeshBin {self.label!r} is synthetic (no live mesh) — "
+                f"usable by policies and the simulator only; enumerate "
+                f"executable slices with MeshBin.from_mesh")
+        from jax.sharding import NamedSharding, PartitionSpec
+        spec = self.spec if self.spec is not None else PartitionSpec()
+        return NamedSharding(self.mesh, spec)
+
+    def describe(self) -> dict[str, Any]:
+        return {**super().describe(), "axis_shape": dict(self.axis_shape)}
+
+
+# ----------------------------------------------------------------------
+# duck-typed views over arbitrary bin objects (legacy bins stay raw)
+# ----------------------------------------------------------------------
+def bin_kind(b: Any) -> str:
+    """``"device"`` / ``"host"`` / ``"mesh"``; raw objects are devices."""
+    return getattr(b, "kind", "device")
+
+
+def bin_capabilities(b: Any) -> frozenset[str]:
+    caps = getattr(b, "capabilities", None)
+    if caps is not None:
+        return frozenset(caps)
+    if isinstance(b, jax.Device):
+        return frozenset({"device", b.platform})
+    return frozenset({"device"})
+
+
+def bin_lane_width(b: Any) -> int:
+    """Copy/compute lane *pairs* a bin owns: one per member device (a
+    mesh slice runs one independent stream pair per chip; a device bin
+    owns exactly one — the unchanged overlap model)."""
+    return int(getattr(b, "device_count", 1))
+
+
+def bin_compute_scale(b: Any) -> float:
+    """Speedup a mesh-sharded kernel gets from occupying the whole
+    slice: ideal linear scaling over member devices."""
+    return float(getattr(b, "device_count", 1))
+
+
+def eligible_bins(requires: frozenset[str], bins: Sequence[Any]) -> list[int]:
+    """Bin indices whose capabilities satisfy ``requires`` (StarPU-style
+    per-codelet eligibility; an empty tag set is eligible everywhere)."""
+    if not requires:
+        return list(range(len(bins)))
+    return [i for i, b in enumerate(bins)
+            if requires <= bin_capabilities(b)]
+
+
+def node_requires(node: Node) -> frozenset[str]:
+    """Capability tags a node carries: a kernel's own ``requires``; a
+    pull inherits the union of the kernels it feeds (its transfers are
+    sharded exactly when its consumer is)."""
+    if node.type == TaskType.KERNEL:
+        return frozenset(node.state.get("requires", ()))
+    if node.type == TaskType.PULL:
+        out: set[str] = set()
+        for s in node.successors:
+            if s.type == TaskType.KERNEL:
+                out |= set(s.state.get("requires", ()))
+        return frozenset(out)
+    return frozenset()
+
+
+def mesh_wide(node: Node, b: Any) -> bool:
+    """True when ``node`` occupies ALL lane pairs of bin ``b``: a
+    mesh-tagged (sharded) task on a mesh bin spans every member device;
+    everything else uses one lane pair."""
+    return bin_kind(b) == "mesh" and "mesh" in node_requires(node)
+
+
+# ----------------------------------------------------------------------
+# trace v3 descriptors
+# ----------------------------------------------------------------------
+def describe_bin(b: Any) -> dict[str, Any]:
+    """Serializable descriptor for any bin object (trace v3)."""
+    if isinstance(b, ExecutionBin):
+        return b.describe()
+    from repro.core.streams import device_key
+    return {"kind": "device", "label": device_key(b),
+            "capabilities": sorted(bin_capabilities(b)), "device_count": 1}
+
+
+def bin_from_descriptor(desc: Mapping[str, Any]) -> ExecutionBin:
+    """Reconstruct a bin from its trace descriptor.
+
+    Mesh bins come back *synthetic* (no live ``Mesh``) — enough for the
+    simulator's replay/cost model, which only needs kind, label, shape,
+    and capabilities."""
+    kind = desc.get("kind", "device")
+    label = desc.get("label", "")
+    if kind == "host":
+        return HostBin(label=label or "host")
+    if kind == "mesh":
+        b = MeshBin(label or "mesh", desc.get("axis_shape") or {"_": 1})
+        b.device_count = int(desc.get("device_count", b.device_count))
+        if desc.get("capabilities"):
+            b.capabilities = frozenset(desc["capabilities"])
+        return b
+    b = DeviceBin(label, label=label)
+    if desc.get("capabilities"):
+        b.capabilities = frozenset(desc["capabilities"])
+    return b
+
+
+def bins_from_trace(trace: Mapping[str, Any]) -> list[ExecutionBin]:
+    """Bins recorded in a trace, reconstructed for replay.
+
+    v3 traces carry full descriptors; v1/v2 traces only have
+    ``meta.bins`` labels, which come back as label-only device bins."""
+    meta = trace.get("meta", {})
+    descs = meta.get("bin_descriptors")
+    if descs:
+        return [bin_from_descriptor(d) for d in descs]
+    return [DeviceBin(label, label=label)
+            for label in meta.get("bins", ())]

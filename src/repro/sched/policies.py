@@ -23,10 +23,19 @@ from typing import Any, Hashable, Mapping, Sequence
 
 from repro.core.graph import Heteroflow, Node, TaskType
 
-from .base import Scheduler, TaskGroup, bin_load, register
+from .base import Scheduler, TaskGroup, bin_load, group_candidates, register
+from .bins import bin_compute_scale, bin_lane_width
 from .simulator import CostModel
 
 __all__ = ["BalancedBins", "Heft", "RoundRobin", "RandomPolicy"]
+
+
+def _mesh_scale(g: TaskGroup, b: object) -> float:
+    """Compute speedup group ``g`` gets on bin ``b``: a mesh-tagged
+    (sharded) group spans every member device of a mesh slice — ideal
+    linear scaling — while everything else runs at single-device speed
+    (``repro.sched.bins``; the simulator charges the same rule)."""
+    return bin_compute_scale(b) if "mesh" in g.requires else 1.0
 
 
 @register
@@ -37,6 +46,9 @@ class BalancedBins(Scheduler):
     Exactly reproduces the seed ``core.placement.place()`` decisions:
     groups are sorted by descending cost with a stable sort (ties keep
     first-seen order), and load ties resolve to the lowest bin index.
+    Capability-tagged groups only consider their eligible bins, and a
+    mesh-sharded group adds ``cost / slice_device_count`` to a mesh
+    bin's load (it occupies the slice for that much less time).
     """
 
     name = "balanced"
@@ -51,9 +63,10 @@ class BalancedBins(Scheduler):
         for g in sorted(groups, key=lambda g: -g.cost):
             idx = self._pinned_index(g, bins)
             if idx is None:
-                idx = min(load, key=load.get)
+                idx = min(group_candidates(g, bins),
+                          key=lambda i: (load[i], i))
             assignment[g.root] = idx
-            load[idx] += g.cost
+            load[idx] += g.cost / _mesh_scale(g, bins[idx])
         return assignment
 
 
@@ -77,7 +90,8 @@ class RoundRobin(Scheduler):
         for g in sorted(groups, key=lambda g: g.order):
             idx = self._pinned_index(g, bins)
             if idx is None:
-                idx = cursor % len(bins)
+                cand = group_candidates(g, bins)
+                idx = cand[cursor % len(cand)]
                 cursor += 1
             assignment[g.root] = idx
         return assignment
@@ -102,7 +116,8 @@ class RandomPolicy(Scheduler):
         for g in sorted(groups, key=lambda g: g.order):
             idx = self._pinned_index(g, bins)
             if idx is None:
-                idx = rng.randrange(len(bins))
+                cand = group_candidates(g, bins)
+                idx = cand[rng.randrange(len(cand))]
             assignment[g.root] = idx
         return assignment
 
@@ -193,19 +208,30 @@ class Heft(Scheduler):
         # is tracked per LANE when the model overlaps (lane_depth >= 2):
         # a group's pulls queue on the copy lane, its kernels on the
         # compute lane — the same two clocks the simulator advances.
+        # Each bin owns one lane *pair per member device* (mesh slices
+        # have several), so availability is a per-server list: a
+        # mesh-sharded group occupies every server of its slice, any
+        # other task takes the earliest-free one — mirroring the
+        # simulator's multi-server lane model exactly.
         overlap = model.lane_depth >= 2
-        copy_free = [bin_load(initial_load, bins, i)
-                     / (model.compute_rate * (model.speed(i) or 1.0))
-                     for i in range(n_bins)]
-        compute_free = list(copy_free) if overlap else copy_free
+        widths = [bin_lane_width(b) for b in bins]
+        init_s = [bin_load(initial_load, bins, i)
+                  / (model.compute_rate * (model.speed(i) or 1.0))
+                  for i in range(n_bins)]
+        copy_free = [[init_s[i]] * widths[i] for i in range(n_bins)]
+        compute_free = ([list(s) for s in copy_free] if overlap
+                        else copy_free)
         finish: dict[Hashable, float] = {}
         placed: dict[Hashable, int] = {}
         assignment: dict[Hashable, int] = {}
         for g in sorted(groups, key=lambda g: (-group_rank[g.root], g.order)):
             pinned = self._pinned_index(g, bins)
+            wide = "mesh" in g.requires
             best: tuple[int, float, float, float] | None = None
-            candidates = range(n_bins) if pinned is None else (pinned,)
+            candidates = (group_candidates(g, bins) if pinned is None
+                          else (pinned,))
             # pull time is bandwidth-bound — identical on every candidate
+            # (a sharded group splits it across the slice's copy lanes)
             pull_t = sum(model.node_time(t) for t in g.nodes
                          if t.type == TaskType.PULL)
             for i in candidates:
@@ -217,24 +243,40 @@ class Heft(Scheduler):
                     if placed[pg] != i:
                         t_avail += model.transfer_time(nbytes)
                     data_ready = max(data_ready, t_avail)
+                scale = _mesh_scale(g, bins[i])
+                # a wide group waits for ALL servers; a narrow one for
+                # the earliest-free server of each lane class
+                avail = max if wide else min
+                copy_avail = avail(copy_free[i])
+                compute_avail = avail(compute_free[i])
                 # node_time scales only kernels by speed — the same rule
                 # the simulator charges, so EFT optimizes what it measures
                 kern_t = sum(model.node_time(t, speed=model.speed(i))
-                             for t in g.nodes if t.type != TaskType.PULL)
-                copy_done = (max(data_ready, copy_free[i]) + pull_t
-                             if pull_t > 0 else data_ready)
-                eft = (max(copy_done, compute_free[i]) + kern_t
-                       if kern_t > 0 else max(copy_done, copy_free[i]))
+                             for t in g.nodes
+                             if t.type != TaskType.PULL) / scale
+                g_pull_t = pull_t / scale
+                copy_done = (max(data_ready, copy_avail) + g_pull_t
+                             if g_pull_t > 0 else data_ready)
+                eft = (max(copy_done, compute_avail) + kern_t
+                       if kern_t > 0 else max(copy_done, copy_avail))
                 if best is None or eft < best[1]:
                     best = (i, eft, copy_done, kern_t)
             idx, eft, copy_done, kern_t = best
+
+            def _occupy(servers: list[float], until: float) -> None:
+                if wide:
+                    servers[:] = [until] * len(servers)
+                else:
+                    servers[min(range(len(servers)),
+                                key=servers.__getitem__)] = until
+
             assignment[g.root] = idx
             placed[g.root] = idx
             finish[g.root] = eft
             if pull_t > 0:
-                copy_free[idx] = copy_done
+                _occupy(copy_free[idx], copy_done)
             if kern_t > 0 or not overlap:
-                compute_free[idx] = eft
+                _occupy(compute_free[idx], eft)
         return assignment
 
 

@@ -17,14 +17,20 @@ heteroflow executor:
   simulator *predicts* measured makespans instead of merely ranking
   policies.
 
-Trace format (``version`` 2)::
+Trace format (``version`` 3)::
 
     {
-      "version": 2,
-      "meta": {"bins": ["cpu:0#0", "cpu:0#1"], "workers": 4,
-               "policy": "heft"},
+      "version": 3,
+      "meta": {"bins": ["cpu:0#0", "mesh:2x2[0]"], "workers": 4,
+               "policy": "heft",
+               "bin_descriptors": [
+                 {"kind": "device", "label": "cpu:0#0",
+                  "capabilities": ["cpu", "device"], "device_count": 1},
+                 {"kind": "mesh", "label": "mesh:2x2[0]",
+                  "capabilities": ["cpu", "mesh"], "device_count": 4,
+                  "axis_shape": {"data": 2, "model": 2}}]},
       "records": [
-        {"node": 17, "name": "k3", "type": "kernel", "bin": "cpu:0#1",
+        {"node": 17, "name": "k3", "type": "kernel", "bin": "cpu:0#0",
          "worker": 2, "iteration": 0, "start": 0.0012, "end": 0.0034,
          "cost": 250.0, "bytes": 0, "xfer_bytes": 4096},
         ...
@@ -38,12 +44,19 @@ Trace format (``version`` 2)::
 first record starts at 0 when the trace is exported (raw perf-counter
 values are meaningless across processes).
 
-Version 2 adds ``xfer_bytes`` per kernel record — the bytes of operands
+Version 2 added ``xfer_bytes`` per kernel record — the bytes of operands
 resident on a *different* bin than the kernel's own at invoke time
 (cross-bin device-to-device traffic), which ``CostModel.fit`` uses to
 calibrate ``d2d_bandwidth`` — and the lanes' ``max_depth`` in-flight
-high-watermark.  Version-1 traces still load; readers treat the missing
-field as 0.
+high-watermark.  Version 3 adds ``meta.bin_descriptors`` — one
+serialized ``repro.sched.bins`` descriptor per bin slot (kind / label /
+capabilities / device_count, plus ``axis_shape`` for mesh slices), so a
+trace recorded over mesh bins replays with the right lane widths
+(``sched.bins.bins_from_trace`` reconstructs them) — and a ``requires``
+tag list on records whose node carried capability tags, which
+``CostModel.fit`` uses to normalize the slice speedup out of
+mesh-sharded kernel durations.  Version-1/-2 traces still load; readers
+treat the missing fields as 0 / plain device bins / no tags.
 """
 from __future__ import annotations
 
@@ -59,9 +72,10 @@ from repro.core.placement import _nbytes
 __all__ = ["TaskRecord", "TaskProfiler", "node_bytes", "producer_bytes",
            "cross_bin_bytes", "load_trace"]
 
-TRACE_VERSION = 2
-#: versions load_trace accepts (v1 lacks xfer_bytes; readers default it 0)
-SUPPORTED_TRACE_VERSIONS = (1, 2)
+TRACE_VERSION = 3
+#: versions load_trace accepts (v1 lacks xfer_bytes — readers default it
+#: 0; v1/v2 lack meta.bin_descriptors — readers assume plain device bins)
+SUPPORTED_TRACE_VERSIONS = (1, 2, 3)
 
 
 def node_bytes(node: Node) -> int:
@@ -124,6 +138,9 @@ class TaskRecord:
     cost: float                # abstract cost (executor's cost_fn)
     bytes: int
     xfer_bytes: int = 0        # cross-bin operand bytes (kernels, v2)
+    #: capability tags the node carried (kernels, v3) — fit() needs them
+    #: to undo the slice speedup baked into mesh-sharded durations
+    requires: tuple = ()
 
     @property
     def duration(self) -> float:
@@ -160,6 +177,7 @@ class TaskProfiler:
             cost=cost,
             bytes=node_bytes(node),
             xfer_bytes=cross_bin_bytes(node),
+            requires=tuple(sorted(node.state.get("requires", ()))),
         )
         with self._lock:
             self._records.append(rec)
@@ -173,12 +191,21 @@ class TaskProfiler:
         string denotes the same bin slot in ``records[*].bin``,
         ``meta.bins``, and ``lanes`` — stable across runs.
         """
+        from .bins import describe_bin  # local: bins imports core only
+
         lanes = {key: lane.snapshot()
                  for key, lane in executor._lane_views()}
+        labels = list(executor.device_labels)
+        descriptors = []
+        for b, label in zip(executor.devices, labels):
+            d = describe_bin(b)
+            d["label"] = label          # bins-order slot label, deduped
+            descriptors.append(d)
         meta = {
-            "bins": list(executor.device_labels),
+            "bins": labels,
             "workers": executor.num_workers,
             "policy": executor.scheduler.name,
+            "bin_descriptors": descriptors,
         }
         with self._lock:
             self._lanes = lanes
@@ -236,6 +263,9 @@ class TaskProfiler:
                     "start": r.start - t0, "end": r.end - t0,
                     "cost": r.cost, "bytes": r.bytes,
                     "xfer_bytes": r.xfer_bytes,
+                    # tags only when present (readers default to none)
+                    **({"requires": list(r.requires)} if r.requires
+                       else {}),
                 }
                 for r in recs
             ],

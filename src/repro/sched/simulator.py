@@ -54,6 +54,7 @@ from repro.core.graph import Heteroflow, Node, TaskType
 from repro.core.placement import _nbytes, estimate_node_cost
 from repro.core.streams import COMPUTE_LANE, COPY_LANE, DEFAULT_LANE_DEPTH
 
+from .bins import bin_compute_scale, bin_lane_width, mesh_wide
 from .profile import producer_bytes
 
 __all__ = ["CostModel", "SimReport", "simulate"]
@@ -81,12 +82,27 @@ class CostModel:
     host_time_s: float = 1e-5        # host / placeholder task duration
     device_speed: tuple[float, ...] = ()
     lane_depth: int = DEFAULT_LANE_DEPTH
+    #: per-kernel-NAME calibration (StarPU keeps one history per
+    #: codelet): ``(name, rate, latency_s)`` triples fitted by
+    #: :meth:`fit`; kernels with an entry run at
+    #: ``latency + cost / (rate * speed)``, unseen names fall back to
+    #: the aggregate ``compute_rate``.
+    kernel_rates: tuple[tuple[str, float, float], ...] = ()
     cost_fn: Callable[[Node], float] = estimate_node_cost
 
     def speed(self, bin_index: int) -> float:
         if bin_index < len(self.device_speed):
             return self.device_speed[bin_index]
         return 1.0
+
+    def kernel_rate(self, name: str) -> tuple[float, float]:
+        """(rate, fixed latency) for a kernel name — the per-codelet
+        history when fitted, the aggregate rate otherwise."""
+        cache = getattr(self, "_rate_cache", None)
+        if cache is None:
+            cache = {n: (r, lat) for n, r, lat in self.kernel_rates}
+            object.__setattr__(self, "_rate_cache", cache)
+        return cache.get(name, (self.compute_rate, 0.0))
 
     def out_bytes(self, node: Node) -> int:
         """Bytes a downstream consumer on another bin would transfer."""
@@ -100,7 +116,8 @@ class CostModel:
     def node_time(self, node: Node, *, speed: float = 1.0) -> float:
         """Execution time of one node on a resource of relative ``speed``."""
         if node.type == TaskType.KERNEL:
-            return self.cost_fn(node) / (self.compute_rate * (speed or 1.0))
+            rate, lat = self.kernel_rate(node.name)
+            return lat + self.cost_fn(node) / (rate * (speed or 1.0))
         if node.type == TaskType.PULL:
             nbytes = _nbytes(node.state.get("source"), node.state.get("size"))
             return self.latency_s + nbytes / self.h2d_bandwidth
@@ -149,17 +166,34 @@ class CostModel:
         if hasattr(trace, "trace"):
             trace = trace.trace()
         base = base or cls()
+        meta = trace.get("meta", {})
         records = trace.get("records", ())
         updates: dict[str, Any] = {}
+
+        # mesh-sharded kernels ran device_count× faster than their rate
+        # implies (the slice speedup simulate()/HEFT re-apply at predict
+        # time) — undo it here so fitted rates are slice-independent and
+        # the speedup is not double-counted in the fit→predict loop.
+        # v3 traces carry the tags + bin descriptors this needs; older
+        # traces scale by 1.
+        descs = {d.get("label"): d for d in meta.get("bin_descriptors", ())}
+
+        def rec_scale(r: Mapping[str, Any]) -> float:
+            if "mesh" in r.get("requires", ()):
+                d = descs.get(r.get("bin"))
+                if d is not None and d.get("kind") == "mesh":
+                    return float(d.get("device_count", 1)) or 1.0
+            return 1.0
 
         kernels = [r for r in records if r["type"] == "kernel"]
         local = [r for r in kernels if not r.get("xfer_bytes", 0)]
         rate_pool = local or kernels
         k_cost = sum(r["cost"] for r in rate_pool)
-        k_secs = sum(r["end"] - r["start"] for r in rate_pool)
+        k_secs = sum((r["end"] - r["start"]) * rec_scale(r)
+                     for r in rate_pool)
         rate = None
         speeds: list[float] = []
-        bins = list(trace.get("meta", {}).get("bins", ()))
+        bins = list(meta.get("bins", ()))
         if k_cost > 0 and k_secs > 0:
             rate = k_cost / k_secs
             updates["compute_rate"] = rate
@@ -167,11 +201,51 @@ class CostModel:
                 for label in bins:
                     bc = sum(r["cost"] for r in rate_pool
                              if r["bin"] == label)
-                    bs = sum(r["end"] - r["start"] for r in rate_pool
-                             if r["bin"] == label)
+                    bs = sum((r["end"] - r["start"]) * rec_scale(r)
+                             for r in rate_pool if r["bin"] == label)
                     speeds.append((bc / bs) / rate if bc > 0 and bs > 0
                                   else 1.0)
                 updates["device_speed"] = tuple(speeds)
+
+        def speed_of(label: Any) -> float:
+            if label in bins and len(speeds) == len(bins):
+                return speeds[bins.index(label)] or 1.0
+            return 1.0
+
+        # per-codelet history (StarPU): one (rate, latency) per kernel
+        # NAME.  Durations are normalized by the bin speed fitted above,
+        # so the history composes with device_speed at prediction time;
+        # a least-squares (latency, 1/rate) line is fitted when the name
+        # was observed at two or more distinct costs, otherwise the
+        # latency stays 0 and the rate is the name's cost/seconds.
+        if rate:
+            by_name: dict[str, list] = {}
+            for r in rate_pool:
+                if r.get("name"):
+                    by_name.setdefault(r["name"], []).append(r)
+            named: list[tuple[str, float, float]] = []
+            for name, rs in sorted(by_name.items()):
+                pts = [(r["cost"],
+                        max(r["end"] - r["start"], 1e-12)
+                        * speed_of(r.get("bin")) * rec_scale(r))
+                       for r in rs]
+                cost = sum(c for c, _ in pts)
+                secs = sum(d for _, d in pts)
+                if cost <= 0 or secs <= 0:
+                    continue
+                n_rate, n_lat = cost / secs, 0.0
+                if len({c for c, _ in pts}) >= 2:
+                    mc = cost / len(pts)
+                    md = secs / len(pts)
+                    var = sum((c - mc) ** 2 for c, _ in pts)
+                    cov = sum((c - mc) * (d - md) for c, d in pts)
+                    slope = cov / var if var > 0 else 0.0
+                    lat = md - slope * mc
+                    if slope > 0 and lat >= 0:
+                        n_rate, n_lat = 1.0 / slope, lat
+                named.append((name, n_rate, n_lat))
+            if named:
+                updates["kernel_rates"] = tuple(named)
 
         xfers = [r for r in records if r["type"] in ("pull", "push")]
         latency = base.latency_s
@@ -188,13 +262,10 @@ class CostModel:
         # to the cross-bin bytes those kernels pulled from other bins
         cross = [r for r in kernels if r.get("xfer_bytes", 0) > 0]
         if cross and rate:
-            def bin_speed(label: str) -> float:
-                if label in bins and len(speeds) == len(bins):
-                    return speeds[bins.index(label)] or 1.0
-                return 1.0
             excess = sum(
                 max((r["end"] - r["start"])
-                    - r["cost"] / (rate * bin_speed(r["bin"])), 0.0)
+                    - r["cost"] / (rate * speed_of(r["bin"])
+                                   * rec_scale(r)), 0.0)
                 for r in cross)
             d2d_bytes = sum(r["xfer_bytes"] for r in cross)
             beyond = excess - latency * len(cross)
@@ -215,10 +286,14 @@ class SimReport:
     """Outcome of one simulated run."""
 
     makespan: float
-    #: bin index -> busy seconds summed over BOTH lanes (work conserved
-    #: across lane modes; may exceed makespan when copy overlaps compute)
+    #: bin index -> busy SERVER-seconds summed over BOTH lanes (work
+    #: conserved across lane modes; a mesh-wide task is charged once per
+    #: occupied member lane; may exceed makespan when copy overlaps
+    #: compute or a multi-lane bin runs tasks concurrently)
     busy: dict[int, float]
-    utilization: dict[int, float]           # bin index -> busy / makespan
+    #: bin index -> busy / (makespan * lane width): 1.0 = every member
+    #: lane pair full; can exceed 1.0 when copies hide behind compute
+    utilization: dict[int, float]
     host_busy: float
     n_transfers: int
     transfer_seconds: float
@@ -366,16 +441,29 @@ def simulate(
         if rp is not None and n.name in rp.duration:
             return rp.duration[n.name]
         speed = model.speed(bin_index) if bin_index != _HOST else 1.0
-        return model.node_time(n, speed=speed)
+        dur = model.node_time(n, speed=speed)
+        # a mesh-sharded task spans every member device of its slice:
+        # ideal linear scaling (compute split N ways, transfers striped
+        # over N copy engines) — the same rule HEFT's EFT charges
+        if bin_index != _HOST and mesh_wide(n, bins[bin_index]):
+            dur /= bin_compute_scale(bins[bin_index])
+        return dur
 
     # -- event loop ----------------------------------------------------
     pending = {n.id: len(n.dependents) for n in graph.nodes}
     arrival: dict[int, float] = {}
     finish: dict[int, float] = {}
-    # per-bin lane clocks; with lane_depth < 2 both names alias ONE list,
-    # so copies and kernels serialize against each other (legacy model)
-    copy_free = [0.0] * len(bins)
-    compute_free = copy_free if not overlap else [0.0] * len(bins)
+    # per-bin lane clocks: one copy+compute lane PAIR per member device
+    # (a DeviceBin owns one pair — the unchanged overlap model; a
+    # MeshBin owns one per chip in the slice, so independent tasks can
+    # run on different members concurrently while a mesh-sharded task
+    # occupies every server at once).  With lane_depth < 2 both names
+    # alias ONE server list per bin, so copies and kernels serialize
+    # against each other (legacy model).
+    widths = [bin_lane_width(b) for b in bins]
+    copy_free = [[0.0] * w for w in widths]
+    compute_free = (copy_free if not overlap
+                    else [[0.0] * w for w in widths])
     lane_clock = {COPY_LANE: copy_free, COMPUTE_LANE: compute_free}
     workers = [0.0] * max(1, host_workers)
     heapq.heapify(workers)
@@ -398,11 +486,22 @@ def simulate(
             start = max(ready_t, wfree)
             host_busy += dur
         else:
-            lane = lane_clock[kind]
-            start = max(ready_t, wfree, lane[b])
-            lane[b] = start + dur
-            busy[b] += dur
-            lane_busy[b][kind] += dur
+            servers = lane_clock[kind][b]
+            if mesh_wide(n, bins[b]):
+                # sharded task: waits for, then occupies, EVERY server —
+                # and is charged server-seconds for all of them, so
+                # utilization (normalized by lane width below) stays
+                # honest on multi-lane bins
+                start = max(ready_t, wfree, max(servers))
+                servers[:] = [start + dur] * len(servers)
+                occupied = len(servers)
+            else:
+                j = min(range(len(servers)), key=servers.__getitem__)
+                start = max(ready_t, wfree, servers[j])
+                servers[j] = start + dur
+                occupied = 1
+            busy[b] += dur * occupied
+            lane_busy[b][kind] += dur * occupied
         heapq.heappush(workers, start + dur)
         finish[n.id] = start + dur
         schedule.append((n.id, kind, b, start, start + dur))
@@ -437,7 +536,11 @@ def simulate(
         raise RuntimeError(f"simulation stalled: {done}/{total} tasks ran")
 
     makespan = max(finish.values())
-    util = {i: (busy[i] / makespan if makespan > 0 else 0.0) for i in busy}
+    # utilization normalizes by lane width so a multi-lane mesh bin is
+    # full at 1.0 per member device; copy∥compute overlap can still push
+    # it past 1.0 (busy sums both lane classes), as for device bins
+    util = {i: (busy[i] / (makespan * widths[i]) if makespan > 0 else 0.0)
+            for i in busy}
     return SimReport(
         makespan=makespan,
         busy=busy,

@@ -266,9 +266,13 @@ def test_profiler_trace_format_and_roundtrip(tmp_path):
     G, ex = _profiled_run(12, seed=5, profiler=prof)
     assert len(prof.records) == len(G)          # every node reported
     trace = prof.trace()
-    assert trace["version"] == 2
+    assert trace["version"] == 3
     assert trace["meta"]["bins"] == ex.device_labels
     assert trace["meta"]["policy"] == "balanced"
+    # v3: one serialized bin descriptor per slot, labels matching
+    descs = trace["meta"]["bin_descriptors"]
+    assert [d["label"] for d in descs] == ex.device_labels
+    assert all(d["kind"] == "device" for d in descs)
     for r in trace["records"]:
         assert {"node", "name", "type", "bin", "worker", "iteration",
                 "start", "end", "cost", "bytes", "xfer_bytes"} <= set(r)
