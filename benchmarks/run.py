@@ -18,6 +18,10 @@ import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root too: `python benchmarks/run.py` puts benchmarks/ (not the
+# root) on sys.path, breaking the `from benchmarks.workloads import`
+# inside bench_sched_scaling
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
 import numpy as np

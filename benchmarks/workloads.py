@@ -117,7 +117,7 @@ def build_detailed_placement(n_iters: int, n_cells: int = 256):
         match = G.kernel(_matching_kernel, p_w, mis,
                          cost=float(n_cells), name=f"match[{it}]")
         sink = G.host(
-            lambda m=match: objective.append(float(m._node.state["result"])),
+            lambda m=match: objective.append(float(m.result())),
             name=f"collect[{it}]")
         mis.succeed(p_adj, p_scores).precede(part)
         part.precede(match)
@@ -244,6 +244,41 @@ def build_sharded_stack(n_sharded: int = 4, width: int = 6,
     return G
 
 
+def build_pipeline(n_stages: int = 4, n_microbatches: int = 8,
+                   stage_costs=None, d: int = 8, *,
+                   require_stage_bins: bool = False):
+    """Pipeline-parallel workload over the REAL ``distributed.pipeline``
+    builder — (n_stages × n_microbatches) cells with GPipe fill/drain
+    dependencies and per-stage cost asymmetry (default costs cycle
+    c, 2c, 3c, so the bottleneck stage dominates the lower bound
+    ``pipeline_schedule_length`` computes).
+
+    Stage callables are pure numpy (``tanh(x @ w)``), so the graph is
+    executable on the real executor as well as the simulator.  With
+    ``require_stage_bins=True`` cells carry ``requires={"stage"}`` and
+    placement demands a ``StageBin`` pool (``sched_bench --bins
+    stage:N``); the default untagged variant schedules on plain bins —
+    stage groups stay atomic either way (``stage=s`` tags).
+    """
+    from repro.distributed.pipeline import Stage, build_pipeline_graph
+
+    costs = (list(stage_costs) if stage_costs is not None
+             else [100.0 * (1 + s % 3) for s in range(n_stages)])
+    rng = np.random.default_rng(3)
+
+    def fn(w, x):
+        return np.tanh(np.asarray(x) @ np.asarray(w))
+
+    stages = [Stage(fn=fn,
+                    params=(rng.normal(size=(d, d)) * 0.3).astype(np.float32),
+                    cost=float(costs[s]))
+              for s in range(n_stages)]
+    mbs = [rng.normal(size=(4, d)).astype(np.float32)
+           for _ in range(n_microbatches)]
+    return build_pipeline_graph(stages, mbs,
+                                require_stage_bins=require_stage_bins)
+
+
 def build_random_dag(n_kernels: int = 64, seed: int = 0, fan_in: int = 3,
                      nbytes: int = 512, with_pushes: bool = True):
     """Seeded layered random DAG of ``n_kernels`` kernels.
@@ -272,7 +307,7 @@ def build_random_dag(n_kernels: int = 64, seed: int = 0, fan_in: int = 3,
         # route the kernel's scalar through a pull re-bound by a host
         # capture: pushes only read PullTask buffers, so collect via host
         h = G.host(lambda k=k, s_i=s_i: outputs.__setitem__(
-            s_i, float(np.asarray(k._node.state["result"]))),
+            s_i, float(np.asarray(k.result()))),
             name=f"collect{s_i}")
         h.succeed(k)
     return G, outputs

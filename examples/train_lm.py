@@ -84,7 +84,7 @@ def main():
     kernel = hf.kernel(do_step, pull_t, pull_l, name="train_step")
 
     def collect():
-        losses.append(float(kernel._node.state["result"]))
+        losses.append(float(kernel.result()))
         n = len(losses)
         if n % 10 == 0:
             tok_s = n * args.batch * args.seq / (time.time() - t0)

@@ -211,6 +211,14 @@ class SchedConfig:
     placement); ``trace_path``, when set, records a
     ``sched.TaskProfiler`` trace there for offline ``CostModel.fit``
     calibration.
+
+    Non-ideal sharded scaling (``CostModel.collective_overhead``):
+    ``collective_alpha`` (seconds per ring hop) and ``collective_beta``
+    (bytes/s per link) charge mesh-wide compute an α·(n−1) +
+    bytes·(n−1)/(n·β) ring-collective term in the simulator and HEFT's
+    EFT instead of the ideal linear ``device_count`` speedup.  Both
+    default 0 = overhead off (baselines reproduce bit-for-bit);
+    ``sched_bench --collective-alpha/--collective-beta`` sweeps them.
     """
     policy: str = "balanced"
     host_workers: int = 4
@@ -219,6 +227,8 @@ class SchedConfig:
     replace_every: int = 0
     migrate_top_k: int = 0
     trace_path: str = ""
+    collective_alpha: float = 0.0
+    collective_beta: float = 0.0
 
 
 DEFAULT_SCHED = SchedConfig()

@@ -37,7 +37,8 @@ import numpy as np
 from .graph import Heteroflow, KernelTask, Node, PullTask, TaskType, _span_view
 from .memory import DeviceArena
 from .placement import estimate_node_cost
-from .streams import LaneRegistry, ScopedDeviceContext, bin_labels, dedup_labels
+from .streams import (LaneRegistry, ScopedDeviceContext, bin_labels,
+                      dedup_labels, execution_target)
 
 __all__ = ["Executor", "Topology"]
 
@@ -120,10 +121,14 @@ class Executor:
     num_workers: CPU worker threads (default: cpu count).
     devices: execution bins for Algorithm-1 placement — ``jax.Device``s,
         shardings, or ``repro.sched.bins`` execution bins
-        (``DeviceBin`` / ``HostBin`` / ``MeshBin`` sub-mesh slices;
-        default: ``jax.devices()``).  Capability-tagged kernels
-        (``requires={"mesh"}``) are only placed on bins whose
-        capabilities satisfy the tags.
+        (``DeviceBin`` / ``HostBin`` / ``MeshBin`` sub-mesh slices /
+        ``StageBin`` pipeline-stage slots, which dispatch onto their
+        member bin; default: ``jax.devices()``).  Capability-tagged
+        kernels (``requires={"mesh"}``) are only placed on bins whose
+        capabilities satisfy the tags.  Stage-tagged kernels
+        (``stage=s``) form one placement group per stage, so
+        re-placement windows (``replace_every`` / ``migrate_top_k``)
+        move whole stages atomically — never individual cells.
     arena_bytes: if set, a buddy :class:`DeviceArena` of this capacity is
         created per device bin (paper's per-GPU memory pool).
     scheduler: placement policy — a ``repro.sched.Scheduler`` instance or
@@ -494,13 +499,17 @@ class Executor:
         Execution bins (``repro.sched.bins``, duck-typed via ``kind``)
         refine the target: a device bin unwraps to its ``jax.Device``, a
         mesh bin transfers under its slice ``NamedSharding`` (replicated
-        by default, the group's pspec context when set), and a host bin
-        keeps the span host-resident — no transfer at all.  An explicit
+        by default, the group's pspec context when set), a host bin
+        keeps the span host-resident — no transfer at all — and a
+        *stage* bin delegates to whichever member bin backs the stage
+        slot (stage-scope dispatch: the stage is a scheduling identity,
+        its member is the execution resource).  An explicit
         ``sharding=`` pin still overrides everything.
         """
         host = _span_view(node.state["source"], node.state.get("size"))
         sharding = node.state.get("sharding")
-        kind = getattr(node.device, "kind", None)
+        eff = execution_target(node.device)  # stage slots → member bin
+        kind = getattr(eff, "kind", None)
         lane = self.lanes.lane(node.device)
         arena = self.arenas.get(id(node.device))
         if kind == "host" and sharding is None:
@@ -510,9 +519,9 @@ class Executor:
         if sharding is not None:
             target = sharding
         elif kind is not None:
-            target = node.device.put_target()
+            target = eff.put_target()
         else:
-            target = node.device
+            target = eff
         with ScopedDeviceContext(node.device):
             if target is not None:
                 buf = jax.device_put(host, target)

@@ -195,6 +195,18 @@ class KernelTask(Task):
         self._require()
         return self._node.device
 
+    def result(self):
+        """The value returned by the kernel's last execution (the public
+        accessor collect sinks and metrics hooks read — user code should
+        never reach into ``_node.state``)."""
+        self._require()
+        try:
+            return self._node.state["result"]
+        except KeyError:
+            raise RuntimeError(
+                f"kernel '{self._node.name}' has not executed yet"
+            ) from None
+
 
 def _span_view(source, size=None) -> np.ndarray:
     """Materialize a host source into a contiguous array view.
@@ -241,7 +253,8 @@ class Heteroflow:
         return HostTask(node)
 
     def pull(self, source, size: int | None = None, *,
-             sharding=None, name: str | None = None) -> PullTask:
+             sharding=None, stage: int | None = None,
+             name: str | None = None) -> PullTask:
         """Create a pull (H2D) task.
 
         ``source`` may be an array, a list, or a zero-arg callable
@@ -249,9 +262,13 @@ class Heteroflow:
         ``sharding`` optionally pins the transfer to a NamedSharding; when
         omitted, the scheduler's device placement decides (paper §III-A.2:
         "the exact GPU ... is decided by the scheduler at runtime").
+        ``stage`` tags the pull with a pipeline-stage id (see
+        :meth:`kernel`) so it joins that stage's placement group.
         """
         node = self._add(TaskType.PULL, name)
         node.state.update(source=source, size=size, sharding=sharding)
+        if stage is not None:
+            node.state["stage"] = int(stage)
         return PullTask(node)
 
     def push(self, source: PullTask, target, size: int | None = None, *,
@@ -268,7 +285,7 @@ class Heteroflow:
 
     def kernel(self, fn: Callable[..., Any], *args: Any,
                writes: Sequence[PullTask] = (), cost: float | None = None,
-               requires: Sequence[str] = (),
+               requires: Sequence[str] = (), stage: int | None = None,
                name: str | None = None) -> KernelTask:
         """Create a kernel task offloading ``fn(*args)`` to a device.
 
@@ -290,6 +307,13 @@ class Heteroflow:
         ``requires={"mesh"}`` marks a pjit'd sharded kernel that only a
         mesh-slice bin may run.  The scheduler enforces it for the whole
         affinity group; an empty set (default) is eligible everywhere.
+
+        ``stage`` tags the kernel with a pipeline-stage id: every node
+        sharing a stage id is unioned into ONE placement group
+        (``repro.sched.base.build_groups``), so any policy moves the
+        stage atomically — the mechanism ``distributed.pipeline`` emits
+        its cells with, replacing hand-pinned stage placement.  It is an
+        identity, not a pin: the scheduler still chooses the bin.
         """
         node = self._add(TaskType.KERNEL, name)
         sources = [a._node for a in args if isinstance(a, PullTask)]
@@ -300,6 +324,8 @@ class Heteroflow:
             if isinstance(requires, str):       # requires="mesh" is one
                 requires = (requires,)          # tag, not four letters
             node.state["requires"] = frozenset(requires)
+        if stage is not None:
+            node.state["stage"] = int(stage)
         return KernelTask(node)
 
     # ------------------------------------------------------------------

@@ -25,7 +25,7 @@ from typing import Any, Sequence
 import jax
 
 __all__ = ["DispatchLane", "ScopedDeviceContext", "LaneRegistry",
-           "device_key", "bin_labels", "dedup_labels",
+           "device_key", "bin_labels", "dedup_labels", "execution_target",
            "COPY_LANE", "COMPUTE_LANE", "DEFAULT_LANE_DEPTH"]
 
 #: Lane classes a device bin multiplexes, mirroring the paper's per-device
@@ -63,6 +63,17 @@ def device_key(device: Any) -> str:
     if label is not None and getattr(device, "kind", None) is not None:
         return str(label)
     return f"{type(device).__name__}:{device!r}"
+
+
+def execution_target(b: Any) -> Any:
+    """The bin ``b`` actually executes on: pipeline-stage slots
+    (``repro.sched.bins.StageBin``, duck-typed by ``kind == "stage"``)
+    delegate to their member, recursively.  The single definition of
+    stage-delegation semantics — the executor's dispatch, the device
+    scopes below, and ``repro.sched.bins`` all resolve through here."""
+    while getattr(b, "kind", None) == "stage":
+        b = b.member
+    return b
 
 
 def dedup_labels(keys: Sequence[str]) -> list[str]:
@@ -187,6 +198,7 @@ class ScopedDeviceContext(contextlib.AbstractContextManager):
     """
 
     def __init__(self, device: Any):
+        device = execution_target(device)   # stage slots → member bin
         kind = getattr(device, "kind", None)
         self.mesh = device.mesh if kind == "mesh" else None
         if kind == "device":

@@ -91,7 +91,7 @@ def main(argv=None) -> int:
 
         kernel = hf.kernel(do_step, pull_t, pull_l, name="train_step")
         sink = hf.host(lambda: losses.append(
-            float(kernel._node.state["result"])), name="metrics")
+            float(kernel.result())), name="metrics")
         kernel.succeed(pull_t, pull_l).precede(sink)
 
         with Executor(num_workers=2) as ex:

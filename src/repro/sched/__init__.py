@@ -28,11 +28,19 @@ feed it back through ``Heft.from_trace`` /
 ``Executor(replace_every=N, migrate_top_k=k)``.
 
 Execution bins (``sched.bins``): bins are first-class — ``DeviceBin``
-(legacy single device), ``HostBin``, and ``MeshBin`` (a named sub-mesh
-slice with per-member lane pairs and linear sharded-compute scaling).
-``Heteroflow.kernel(..., requires={"mesh"})`` restricts a kernel's
-group to bins offering those capabilities, StarPU-style; v3 traces
-serialize bin descriptors so mesh runs replay faithfully.
+(legacy single device), ``HostBin``, ``MeshBin`` (a named sub-mesh
+slice with per-member lane pairs and linear sharded-compute scaling),
+and ``StageBin`` (a pipeline-stage slot wrapping any member bin and
+carrying inter-stage link bandwidth/latency; ``distributed.pipeline``
+emits ``stage=s``-tagged cells that form one placement group per
+stage).  ``Heteroflow.kernel(..., requires={"mesh"})`` restricts a
+kernel's group to bins offering those capabilities, StarPU-style; v3+
+traces serialize bin descriptors so mesh/stage runs replay faithfully
+(v4 adds per-record stage ids and link descriptors, letting
+``CostModel.fit`` calibrate ``stage_link_bandwidth`` from a recorded
+pipeline run).  Non-ideal sharded scaling:
+``CostModel(collective_alpha=..., collective_beta=...)`` charges an
+α-β ring-collective overhead on mesh-wide compute (default off).
 """
 from .base import (
     Scheduler,
@@ -49,10 +57,14 @@ from .bins import (
     ExecutionBin,
     HostBin,
     MeshBin,
+    StageBin,
     bin_capabilities,
     bins_from_trace,
     describe_bin,
     eligible_bins,
+    execution_target,
+    stage_bins,
+    stage_link,
 )
 from .policies import BalancedBins, Heft, RandomPolicy, RoundRobin
 from .profile import (
@@ -68,7 +80,8 @@ from .simulator import CostModel, SimReport, simulate
 __all__ = [
     "Scheduler", "TaskGroup", "build_groups", "apply_assignment",
     "register", "get_scheduler", "available_policies", "group_candidates",
-    "ExecutionBin", "DeviceBin", "HostBin", "MeshBin",
+    "ExecutionBin", "DeviceBin", "HostBin", "MeshBin", "StageBin",
+    "stage_bins", "stage_link", "execution_target",
     "bin_capabilities", "eligible_bins", "describe_bin", "bins_from_trace",
     "BalancedBins", "Heft", "RoundRobin", "RandomPolicy",
     "CostModel", "SimReport", "simulate",

@@ -65,6 +65,12 @@ class TaskGroup:
     #: ``Heteroflow.kernel``): the whole group is only eligible on bins
     #: whose capabilities superset this (StarPU codelet eligibility).
     requires: frozenset = frozenset()
+    #: pipeline-stage identity (``Heteroflow.kernel(..., stage=s)``):
+    #: every node tagged with the same stage id is unioned into ONE
+    #: group, so placement moves whole stages atomically.  ``None`` for
+    #: untagged groups.  Advisory, not a pin — policies use it for
+    #: stage-affinity packing (adjacent stages prefer cheap links).
+    stage_id: int | None = None
 
 
 def build_groups(graph: Heteroflow, cost_fn: CostFn = estimate_node_cost,
@@ -83,6 +89,20 @@ def build_groups(graph: Heteroflow, cost_fn: CostFn = estimate_node_cost,
         if t.type == TaskType.KERNEL:
             for p in t.state.get("sources", ()):
                 uf.union(t.id, p.id)
+    # stage phase: nodes tagged stage=s (distributed.pipeline cells and
+    # their weight pulls) union into one group per stage id — the
+    # structural guarantee that placement moves stages atomically,
+    # replacing the old trick of anchoring every cell on a shared
+    # weight-pull argument just so the union-find would co-place them
+    anchor: dict[int, Hashable] = {}
+    for t in nodes:
+        if t.type not in (TaskType.KERNEL, TaskType.PULL):
+            continue
+        sid = t.state.get("stage")
+        if sid is not None:
+            a = anchor.setdefault(sid, t.id)
+            if a != t.id:
+                uf.union(a, t.id)
 
     groups: dict[Hashable, TaskGroup] = {}
     for t in nodes:
@@ -97,6 +117,15 @@ def build_groups(graph: Heteroflow, cost_fn: CostFn = estimate_node_cost,
         req = t.state.get("requires")
         if req:
             g.requires = g.requires | req
+        sid = t.state.get("stage")
+        if sid is not None:
+            if g.stage_id is not None and g.stage_id != sid:
+                raise ValueError(
+                    f"'{t.name}' (stage {sid}) shares an affinity group "
+                    f"with stage {g.stage_id} — a pull feeding two "
+                    f"stages breaks stage atomicity; duplicate it or "
+                    f"drop the stage tags")
+            g.stage_id = sid
         pin = t.state.get("sharding")
         if pin is not None:
             if g.pin is not None and g.pin is not pin:

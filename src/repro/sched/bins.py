@@ -18,6 +18,14 @@ on CUDA workers) and Specx's heterogeneous task placement:
   context pulls need (``put_target`` → a ``NamedSharding`` replicating
   or sharding over the slice) and a ``device_count`` the policies and
   simulator use to cost sharded compute.
+* :class:`StageBin`  — a **pipeline-stage slot**: wraps any member bin
+  (device / host / mesh slice) and adds the inter-stage *link* the
+  Pipeflow model costs explicitly (bandwidth + latency of the
+  activation path into this stage), instead of assuming adjacent
+  stages are pinned next to each other.  Execution delegates to the
+  member (:func:`execution_target`); scheduling sees the stage as one
+  first-class bin whose transfers in/out are charged over its link
+  (``CostModel.transfer_time`` consults :func:`stage_link`).
 
 Capability tags close the loop: ``Heteroflow.kernel(...,
 requires={"mesh"})`` marks a kernel (and, through affinity grouping,
@@ -34,9 +42,13 @@ from typing import Any, Mapping, Sequence
 import jax
 
 from repro.core.graph import Node, TaskType
+# stage-delegation semantics live in ONE place — core.streams — shared
+# by the executor's dispatch, the device scopes, and the views below
+from repro.core.streams import execution_target
 
 __all__ = [
-    "ExecutionBin", "DeviceBin", "HostBin", "MeshBin",
+    "ExecutionBin", "DeviceBin", "HostBin", "MeshBin", "StageBin",
+    "stage_bins", "stage_link", "execution_target",
     "bin_kind", "bin_capabilities", "bin_lane_width", "bin_compute_scale",
     "eligible_bins", "node_requires", "mesh_wide",
     "describe_bin", "bin_from_descriptor", "bins_from_trace",
@@ -225,6 +237,104 @@ class MeshBin(ExecutionBin):
         return {**super().describe(), "axis_shape": dict(self.axis_shape)}
 
 
+class StageBin(ExecutionBin):
+    """A pipeline-stage slot: a member bin plus its inter-stage link.
+
+    ``member`` is the resource the stage actually executes on — a
+    :class:`DeviceBin` / :class:`HostBin` / :class:`MeshBin`, a raw
+    ``jax.Device``, or a plain string label for simulator-only studies.
+    The stage inherits the member's capabilities (plus ``"stage"``, the
+    tag ``distributed.pipeline`` puts on its cell kernels) and its
+    ``device_count``, so a stage backed by a mesh slice still gets the
+    slice's lane pairs and sharded-compute scaling.
+
+    ``link_bandwidth`` (bytes/s) and ``link_latency_s`` describe the
+    **input link** of this stage — the path activations travel to reach
+    it from wherever the previous stage landed (StarPU costs each
+    codelet's data transfers explicitly; Pipeflow schedules stages
+    inside the task-graph runtime rather than beside it).  ``None``
+    falls back to the cost model's fitted ``stage_link_bandwidth`` /
+    generic ``d2d_bandwidth`` and ``latency_s``.
+
+    ``stage_id`` is advisory identity, NOT a pin: any policy may place
+    any stage group on any stage bin — the scheduled-vs-pinned parity
+    gate in ``benchmarks/sched_bench.py`` exists precisely because the
+    free placement must not lose to the historical hand-pinning.
+    """
+
+    kind = "stage"
+
+    def __init__(self, stage_id: int, member: Any, *,
+                 link_bandwidth: float | None = None,
+                 link_latency_s: float | None = None,
+                 label: str | None = None):
+        # only None means "fall back to the cost model" — a zero
+        # bandwidth would silently model as full-speed d2d otherwise
+        if link_bandwidth is not None and link_bandwidth <= 0:
+            raise ValueError(
+                f"StageBin link_bandwidth must be positive or None, "
+                f"got {link_bandwidth!r}")
+        if link_latency_s is not None and link_latency_s < 0:
+            raise ValueError(
+                f"StageBin link_latency_s must be >= 0 or None, "
+                f"got {link_latency_s!r}")
+        self.stage_id = int(stage_id)
+        self.member = member
+        self.link_bandwidth = link_bandwidth
+        self.link_latency_s = link_latency_s
+        if label is None:
+            from repro.core.streams import device_key
+            label = f"stage{self.stage_id}:{device_key(member)}"
+        self.label = label
+        self.device_count = bin_lane_width(member)
+        self.capabilities = frozenset({"stage"} | bin_capabilities(member))
+
+    def _eq_key(self) -> tuple:
+        return (type(self), self.kind, self.label, self.stage_id)
+
+    def put_target(self) -> Any:
+        m = self.member
+        if isinstance(m, ExecutionBin):
+            return m.put_target()
+        return m if isinstance(m, jax.Device) else None
+
+    def describe(self) -> dict[str, Any]:
+        return {**super().describe(),
+                "stage_id": self.stage_id,
+                "link_bandwidth": self.link_bandwidth,
+                "link_latency_s": self.link_latency_s,
+                "member": describe_bin(self.member)}
+
+
+def stage_bins(members: Sequence[Any], *,
+               link_bandwidth: float | None = None,
+               link_latency_s: float | None = None) -> list[StageBin]:
+    """Wrap a bin list into consecutive stage slots with uniform links —
+    the one-liner turning ``jax.devices()`` into a pipeline pool."""
+    return [StageBin(i, m, link_bandwidth=link_bandwidth,
+                     link_latency_s=link_latency_s)
+            for i, m in enumerate(members)]
+
+
+
+
+def stage_link(src_bin: Any, dst_bin: Any) -> tuple[float | None,
+                                                    float | None] | None:
+    """(bandwidth, latency) of the stage link a transfer crosses.
+
+    The *destination* stage's input link governs the transfer (data
+    flows into a stage over its own link); when only the source is a
+    stage bin its link covers the egress.  ``None`` when neither
+    endpoint is a stage — the caller charges generic d2d.  Either
+    tuple element may itself be ``None`` (bin declared no explicit
+    figure): the cost model substitutes its fitted/stage defaults.
+    """
+    for b in (dst_bin, src_bin):
+        if getattr(b, "kind", None) == "stage":
+            return (b.link_bandwidth, b.link_latency_s)
+    return None
+
+
 # ----------------------------------------------------------------------
 # duck-typed views over arbitrary bin objects (legacy bins stay raw)
 # ----------------------------------------------------------------------
@@ -281,9 +391,11 @@ def node_requires(node: Node) -> frozenset[str]:
 
 def mesh_wide(node: Node, b: Any) -> bool:
     """True when ``node`` occupies ALL lane pairs of bin ``b``: a
-    mesh-tagged (sharded) task on a mesh bin spans every member device;
-    everything else uses one lane pair."""
-    return bin_kind(b) == "mesh" and "mesh" in node_requires(node)
+    mesh-tagged (sharded) task on a mesh bin — directly or wrapped in a
+    stage slot — spans every member device; everything else uses one
+    lane pair."""
+    return (bin_kind(execution_target(b)) == "mesh"
+            and "mesh" in node_requires(node))
 
 
 # ----------------------------------------------------------------------
@@ -306,6 +418,18 @@ def bin_from_descriptor(desc: Mapping[str, Any]) -> ExecutionBin:
     and capabilities."""
     kind = desc.get("kind", "device")
     label = desc.get("label", "")
+    if kind == "stage":
+        member = desc.get("member")
+        b = StageBin(int(desc.get("stage_id", 0)),
+                     bin_from_descriptor(member) if member
+                     else DeviceBin(label, label=label),
+                     link_bandwidth=desc.get("link_bandwidth"),
+                     link_latency_s=desc.get("link_latency_s"),
+                     label=label or None)
+        b.device_count = int(desc.get("device_count", b.device_count))
+        if desc.get("capabilities"):
+            b.capabilities = frozenset(desc["capabilities"])
+        return b
     if kind == "host":
         return HostBin(label=label or "host")
     if kind == "mesh":

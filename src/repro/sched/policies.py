@@ -24,7 +24,7 @@ from typing import Any, Hashable, Mapping, Sequence
 from repro.core.graph import Heteroflow, Node, TaskType
 
 from .base import Scheduler, TaskGroup, bin_load, group_candidates, register
-from .bins import bin_compute_scale, bin_lane_width
+from .bins import bin_compute_scale, bin_lane_width, stage_link
 from .simulator import CostModel
 
 __all__ = ["BalancedBins", "Heft", "RoundRobin", "RandomPolicy"]
@@ -38,6 +38,33 @@ def _mesh_scale(g: TaskGroup, b: object) -> float:
     return bin_compute_scale(b) if "mesh" in g.requires else 1.0
 
 
+def _stage_affinity_penalty(g: TaskGroup, i: int, bins, placed_stage):
+    """Stage-affinity tie-break for load-based packing: among equally
+    loaded candidate bins, prefer the one minimizing link cost to the
+    group's already-placed *adjacent* stages (s−1 feeds it, s+1 drains
+    it).  Co-location costs 0; a non-colocated neighbor costs 1 plus
+    the normalized inverse bandwidth of the stage link crossed, so
+    fatter declared links beat thinner ones and any link beats two.
+    Exactly 0.0 for untagged groups — the legacy orderings (and the
+    seed-identical balanced placement) are untouched."""
+    sid = g.stage_id
+    if sid is None or not placed_stage:
+        return 0.0
+    pen = 0.0
+    for adj in (sid - 1, sid + 1):
+        j = placed_stage.get(adj)
+        if j is None or j == i:
+            continue
+        # data flows downstream: the link into the later stage governs
+        link = (stage_link(bins[j], bins[i]) if adj < sid
+                else stage_link(bins[i], bins[j]))
+        bw = link[0] if link is not None else None
+        # normalize by the cost model's default d2d bandwidth (the
+        # dataclass default): undeclared links rank exactly d2d-fast
+        pen += 1.0 + CostModel.d2d_bandwidth / (bw or CostModel.d2d_bandwidth)
+    return pen
+
+
 @register
 class BalancedBins(Scheduler):
     """Paper Algorithm 1 lines 8-14: largest-group-first (LPT) onto the
@@ -49,6 +76,10 @@ class BalancedBins(Scheduler):
     Capability-tagged groups only consider their eligible bins, and a
     mesh-sharded group adds ``cost / slice_device_count`` to a mesh
     bin's load (it occupies the slice for that much less time).
+    Stage-tagged groups (pipeline cells) gain an affinity tie-break:
+    among equally loaded bins, the one with the cheapest link to the
+    group's already-placed adjacent stages wins — untagged graphs keep
+    the seed-identical ``(load, index)`` ordering bit-for-bit.
     """
 
     name = "balanced"
@@ -60,12 +91,18 @@ class BalancedBins(Scheduler):
         load: dict[int, float] = {i: bin_load(initial_load, bins, i)
                                   for i in range(len(bins))}
         assignment: dict[Hashable, int] = {}
+        placed_stage: dict[int, int] = {}
         for g in sorted(groups, key=lambda g: -g.cost):
             idx = self._pinned_index(g, bins)
             if idx is None:
                 idx = min(group_candidates(g, bins),
-                          key=lambda i: (load[i], i))
+                          key=lambda i: (load[i],
+                                         _stage_affinity_penalty(
+                                             g, i, bins, placed_stage),
+                                         i))
             assignment[g.root] = idx
+            if g.stage_id is not None:
+                placed_stage[g.stage_id] = idx
             load[idx] += g.cost / _mesh_scale(g, bins[idx])
         return assignment
 
@@ -143,6 +180,18 @@ class Heft(Scheduler):
     tracked per lane (copy vs. compute), so EFT sees a group's H2D pulls
     overlapping another group's kernel exactly the way the overlapped
     simulator charges them.
+
+    Pipeline-stage groups (``TaskGroup.stage_id``) get a *pipelined*
+    EFT: when an adjacent upstream stage feeds this group cell-by-cell
+    (distinct upstream producers ≥ upstream cells — a lone producer,
+    e.g. a reduction between stages or a last-cell fan-out, still
+    waits for the group finish), its data is ready after that stage's
+    FIRST cell (fill), not its whole-group finish — group-granularity EFT would otherwise model
+    stages as contiguous blocks, conclude that spreading them only adds
+    transfer cost, and serialize the entire pipeline onto one bin.
+    Transfers between stage bins are charged over their inter-stage
+    links (``CostModel.transfer_time``), so adjacent stages land on
+    cheap links: exactly the trade-off the simulator scores.
     """
 
     name = "heft"
@@ -190,15 +239,26 @@ class Heft(Scheduler):
             rank[n.id] = w + best
 
         group_rank = {g.root: max(rank[t.id] for t in g.nodes) for g in groups}
-        # cross-group predecessor map (for EFT data-ready times)
+        stage_of = {g.root: g.stage_id for g in groups}
+        n_cells = {g.root: sum(1 for t in g.nodes
+                               if t.type == TaskType.KERNEL)
+                   for g in groups}
+        # cross-group predecessor map (for EFT data-ready times), plus
+        # the DISTINCT upstream producers per group pair: adjacent
+        # pipeline stages are only *pipelined* (cell-by-cell) when
+        # essentially every upstream cell feeds this group — a single
+        # producer (e.g. a reduction between stages, or a last-cell
+        # fan-out) means the consumer really waits for the group finish
         preds: dict[Hashable, set[tuple[Hashable, int]]] = {g.root: set()
                                                             for g in groups}
+        edge_src: dict[tuple[Hashable, Hashable], set[int]] = {}
         for g in groups:
             for t in g.nodes:
                 for d in t.dependents:
                     gd = group_of.get(d.id)
                     if gd is not None and gd != g.root:
                         preds[g.root].add((gd, model.out_bytes(d)))
+                        edge_src.setdefault((g.root, gd), set()).add(d.id)
 
         # pre-existing load delays a bin's availability, converted from
         # cost units to seconds by the same rule EFT charges for kernels.
@@ -222,6 +282,8 @@ class Heft(Scheduler):
         compute_free = ([list(s) for s in copy_free] if overlap
                         else copy_free)
         finish: dict[Hashable, float] = {}
+        start_c: dict[Hashable, float] = {}   # compute start (placed groups)
+        cell_t: dict[Hashable, float] = {}    # per-cell compute time
         placed: dict[Hashable, int] = {}
         assignment: dict[Hashable, int] = {}
         for g in sorted(groups, key=lambda g: (-group_rank[g.root], g.order)):
@@ -239,9 +301,22 @@ class Heft(Scheduler):
                 for (pg, nbytes) in preds[g.root]:
                     if pg not in placed:
                         continue  # predecessor group not yet ranked-ahead
-                    t_avail = finish[pg]
+                    sid, psid = stage_of[g.root], stage_of.get(pg)
+                    if (sid is not None and psid is not None
+                            and abs(sid - psid) == 1
+                            and len(edge_src.get((g.root, pg), ()))
+                            >= n_cells[pg] > 0):
+                        # adjacent pipeline stages coupled cell-by-cell:
+                        # the first activation is ready one cell into
+                        # the upstream stage, not at its group finish
+                        t_avail = start_c[pg] + cell_t[pg]
+                    else:
+                        t_avail = finish[pg]
                     if placed[pg] != i:
-                        t_avail += model.transfer_time(nbytes)
+                        # stage endpoints charge their inter-stage link
+                        # (EFT prefers adjacent stages on cheap links)
+                        t_avail += model.transfer_time(
+                            nbytes, bins[placed[pg]], bins[i])
                     data_ready = max(data_ready, t_avail)
                 scale = _mesh_scale(g, bins[i])
                 # a wide group waits for ALL servers; a narrow one for
@@ -254,6 +329,13 @@ class Heft(Scheduler):
                 kern_t = sum(model.node_time(t, speed=model.speed(i))
                              for t in g.nodes
                              if t.type != TaskType.PULL) / scale
+                if wide and scale > 1:
+                    # non-ideal sharded scaling: each sharded kernel
+                    # pays the α-β collective sync the simulator charges
+                    kern_t += sum(
+                        model.collective_overhead(int(scale),
+                                                  model.out_bytes(t))
+                        for t in g.nodes if t.type == TaskType.KERNEL)
                 g_pull_t = pull_t / scale
                 copy_done = (max(data_ready, copy_avail) + g_pull_t
                              if g_pull_t > 0 else data_ready)
@@ -273,6 +355,8 @@ class Heft(Scheduler):
             assignment[g.root] = idx
             placed[g.root] = idx
             finish[g.root] = eft
+            start_c[g.root] = eft - kern_t
+            cell_t[g.root] = kern_t / max(n_cells[g.root], 1)
             if pull_t > 0:
                 _occupy(copy_free[idx], copy_done)
             if kern_t > 0 or not overlap:

@@ -55,8 +55,17 @@ trace recorded over mesh bins replays with the right lane widths
 (``sched.bins.bins_from_trace`` reconstructs them) — and a ``requires``
 tag list on records whose node carried capability tags, which
 ``CostModel.fit`` uses to normalize the slice speedup out of
-mesh-sharded kernel durations.  Version-1/-2 traces still load; readers
-treat the missing fields as 0 / plain device bins / no tags.
+mesh-sharded kernel durations.  Version 4 adds the pipeline-stage
+dimension: a ``stage`` id on records whose node carried one
+(``Heteroflow.kernel(..., stage=s)``), and stage-bin descriptors
+(``kind: "stage"``) embedding the wrapped ``member`` descriptor plus
+the inter-stage **link** figures (``link_bandwidth`` /
+``link_latency_s``) — enough for ``bins_from_trace`` to rebuild the
+stage pool and for ``CostModel.fit`` to calibrate
+``stage_link_bandwidth`` from the excess duration of kernels that ran
+on stage bins with cross-bin operands.  Version-1/-2/-3 traces still
+load; readers treat the missing fields as 0 / plain device bins / no
+tags / no stages.
 """
 from __future__ import annotations
 
@@ -72,10 +81,11 @@ from repro.core.placement import _nbytes
 __all__ = ["TaskRecord", "TaskProfiler", "node_bytes", "producer_bytes",
            "cross_bin_bytes", "load_trace"]
 
-TRACE_VERSION = 3
+TRACE_VERSION = 4
 #: versions load_trace accepts (v1 lacks xfer_bytes — readers default it
-#: 0; v1/v2 lack meta.bin_descriptors — readers assume plain device bins)
-SUPPORTED_TRACE_VERSIONS = (1, 2, 3)
+#: 0; v1/v2 lack meta.bin_descriptors — readers assume plain device
+#: bins; v1-v3 lack per-record stage ids — readers assume no stages)
+SUPPORTED_TRACE_VERSIONS = (1, 2, 3, 4)
 
 
 def node_bytes(node: Node) -> int:
@@ -141,6 +151,8 @@ class TaskRecord:
     #: capability tags the node carried (kernels, v3) — fit() needs them
     #: to undo the slice speedup baked into mesh-sharded durations
     requires: tuple = ()
+    #: pipeline-stage id the node carried (v4); None outside pipelines
+    stage: int | None = None
 
     @property
     def duration(self) -> float:
@@ -178,6 +190,7 @@ class TaskProfiler:
             bytes=node_bytes(node),
             xfer_bytes=cross_bin_bytes(node),
             requires=tuple(sorted(node.state.get("requires", ()))),
+            stage=node.state.get("stage"),
         )
         with self._lock:
             self._records.append(rec)
@@ -263,8 +276,11 @@ class TaskProfiler:
                     "start": r.start - t0, "end": r.end - t0,
                     "cost": r.cost, "bytes": r.bytes,
                     "xfer_bytes": r.xfer_bytes,
-                    # tags only when present (readers default to none)
+                    # tags/stages only when present (readers default
+                    # to none)
                     **({"requires": list(r.requires)} if r.requires
+                       else {}),
+                    **({"stage": r.stage} if r.stage is not None
                        else {}),
                 }
                 for r in recs

@@ -54,7 +54,7 @@ from repro.core.graph import Heteroflow, Node, TaskType
 from repro.core.placement import _nbytes, estimate_node_cost
 from repro.core.streams import COMPUTE_LANE, COPY_LANE, DEFAULT_LANE_DEPTH
 
-from .bins import bin_compute_scale, bin_lane_width, mesh_wide
+from .bins import bin_compute_scale, bin_lane_width, mesh_wide, stage_link
 from .profile import producer_bytes
 
 __all__ = ["CostModel", "SimReport", "simulate"]
@@ -82,6 +82,20 @@ class CostModel:
     host_time_s: float = 1e-5        # host / placeholder task duration
     device_speed: tuple[float, ...] = ()
     lane_depth: int = DEFAULT_LANE_DEPTH
+    #: bytes/s over inter-STAGE links (``StageBin``): the default for
+    #: stage bins that declare no explicit ``link_bandwidth``, fitted by
+    #: :meth:`fit` from a recorded pipeline run (v4 traces).  0 = unset
+    #: → stage transfers fall back to ``d2d_bandwidth``.
+    stage_link_bandwidth: float = 0.0
+    #: non-ideal sharded scaling (ring-collective α-β model): a
+    #: mesh-wide task on an n-device slice pays
+    #: ``α·(n−1) + bytes·(n−1)/(n·β)`` on top of its ``compute/n``
+    #: share — the latency term per ring hop plus the bandwidth term of
+    #: a ring all-reduce.  Both default 0 = overhead off, so the ideal
+    #: linear model (and every pre-existing baseline) reproduces
+    #: bit-for-bit.
+    collective_alpha: float = 0.0    # seconds per ring hop
+    collective_beta: float = 0.0     # bytes/s per link; 0 = off
     #: per-kernel-NAME calibration (StarPU keeps one history per
     #: codelet): ``(name, rate, latency_s)`` triples fitted by
     #: :meth:`fit`; kernels with an entry run at
@@ -89,6 +103,16 @@ class CostModel:
     #: the aggregate ``compute_rate``.
     kernel_rates: tuple[tuple[str, float, float], ...] = ()
     cost_fn: Callable[[Node], float] = estimate_node_cost
+
+    def __post_init__(self) -> None:
+        # a negative α/β would silently SHRINK sharded durations below
+        # the ideal model — reject it, like StageBin rejects
+        # non-positive link figures
+        if self.collective_alpha < 0 or self.collective_beta < 0:
+            raise ValueError(
+                f"collective_alpha/collective_beta must be >= 0 "
+                f"(0 = overhead off), got {self.collective_alpha!r}/"
+                f"{self.collective_beta!r}")
 
     def speed(self, bin_index: int) -> float:
         if bin_index < len(self.device_speed):
@@ -108,10 +132,41 @@ class CostModel:
         """Bytes a downstream consumer on another bin would transfer."""
         return producer_bytes(node)
 
-    def transfer_time(self, nbytes: int) -> float:
+    def transfer_time(self, nbytes: int, src_bin: Any = None,
+                      dst_bin: Any = None) -> float:
+        """Seconds to move ``nbytes`` between two bins.
+
+        When either endpoint is a :class:`~repro.sched.bins.StageBin`
+        the transfer crosses that stage's *link* (the destination's
+        input link wins): the bin's explicit ``link_bandwidth`` /
+        ``link_latency_s``, else the fitted ``stage_link_bandwidth``,
+        else generic d2d.  Without stage endpoints the charge is the
+        legacy ``latency_s + bytes / d2d_bandwidth`` — bit-identical.
+        """
+        bw, lat = self.d2d_bandwidth, self.latency_s
+        link = (stage_link(src_bin, dst_bin)
+                if src_bin is not None or dst_bin is not None else None)
+        if link is not None:
+            bw = link[0] or self.stage_link_bandwidth or self.d2d_bandwidth
+            lat = link[1] if link[1] is not None else self.latency_s
         if nbytes <= 0:
-            return self.latency_s
-        return self.latency_s + nbytes / self.d2d_bandwidth
+            return lat
+        return lat + nbytes / bw
+
+    def collective_overhead(self, n_devices: int, nbytes: int) -> float:
+        """Extra seconds a sharded (mesh-wide) task pays to synchronize
+        its n-device slice: the α-β ring model (α per hop latency, β
+        per-link bandwidth — ring all-reduce moves ``bytes·(n−1)/n``
+        over each link).  Zero when both knobs are 0 (default) or the
+        slice has one device, so ideal linear scaling is untouched."""
+        n = int(n_devices)
+        if n <= 1 or (self.collective_alpha == 0
+                      and self.collective_beta == 0):
+            return 0.0
+        t = self.collective_alpha * (n - 1)
+        if self.collective_beta > 0 and nbytes > 0:
+            t += nbytes * (n - 1) / (n * self.collective_beta)
+        return t
 
     def node_time(self, node: Node, *, speed: float = 1.0) -> float:
         """Execution time of one node on a resource of relative ``speed``."""
@@ -179,9 +234,11 @@ class CostModel:
         descs = {d.get("label"): d for d in meta.get("bin_descriptors", ())}
 
         def rec_scale(r: Mapping[str, Any]) -> float:
+            # a stage bin wrapping a mesh slice inherits the slice's
+            # device_count, so the same normalization applies
             if "mesh" in r.get("requires", ()):
                 d = descs.get(r.get("bin"))
-                if d is not None and d.get("kind") == "mesh":
+                if d is not None and d.get("kind") in ("mesh", "stage"):
                     return float(d.get("device_count", 1)) or 1.0
             return 1.0
 
@@ -259,18 +316,39 @@ class CostModel:
                 updates["h2d_bandwidth"] = total_bytes / beyond
 
         # d2d: excess kernel time over the fitted compute time, attributed
-        # to the cross-bin bytes those kernels pulled from other bins
+        # to the cross-bin bytes those kernels pulled from other bins.
+        # Kernels that ran ON a stage bin crossed a stage *link* (v4
+        # traces carry the bin descriptors saying so), so their excess
+        # calibrates stage_link_bandwidth instead of the generic d2d —
+        # the knob a recorded pipeline run can actually pin down.
         cross = [r for r in kernels if r.get("xfer_bytes", 0) > 0]
-        if cross and rate:
+        def _on_stage(r: Mapping[str, Any]) -> bool:
+            return descs.get(r.get("bin"), {}).get("kind") == "stage"
+
+        staged = [r for r in cross if _on_stage(r)]
+        generic = [r for r in cross if not _on_stage(r)]
+
+        def _xfer_bw(pool: list) -> float | None:
             excess = sum(
                 max((r["end"] - r["start"])
                     - r["cost"] / (rate * speed_of(r["bin"])
                                    * rec_scale(r)), 0.0)
-                for r in cross)
-            d2d_bytes = sum(r["xfer_bytes"] for r in cross)
-            beyond = excess - latency * len(cross)
-            if d2d_bytes > 0 and beyond > 0:
-                updates["d2d_bandwidth"] = d2d_bytes / beyond
+                for r in pool)
+            nbytes = sum(r["xfer_bytes"] for r in pool)
+            beyond = excess - latency * len(pool)
+            if nbytes > 0 and beyond > 0:
+                return nbytes / beyond
+            return None
+
+        if rate:
+            if generic:
+                bw = _xfer_bw(generic)
+                if bw is not None:
+                    updates["d2d_bandwidth"] = bw
+            if staged:
+                bw = _xfer_bw(staged)
+                if bw is not None:
+                    updates["stage_link_bandwidth"] = bw
 
         hosts = [r for r in records
                  if r["type"] in ("host", "placeholder")]
@@ -444,9 +522,20 @@ def simulate(
         dur = model.node_time(n, speed=speed)
         # a mesh-sharded task spans every member device of its slice:
         # ideal linear scaling (compute split N ways, transfers striped
-        # over N copy engines) — the same rule HEFT's EFT charges
+        # over N copy engines) — the same rule HEFT's EFT charges —
+        # plus the α-β collective-sync overhead when the non-ideal
+        # scaling model is enabled (CostModel.collective_overhead)
         if bin_index != _HOST and mesh_wide(n, bins[bin_index]):
-            dur /= bin_compute_scale(bins[bin_index])
+            scale = bin_compute_scale(bins[bin_index])
+            dur /= scale
+            # the collective sync is a COMPUTE cost: kernels only, the
+            # same rule HEFT's EFT charges (pulls are striped, not
+            # all-reduced — they keep the ideal split above)
+            if n.type == TaskType.KERNEL:
+                ov = model.collective_overhead(int(scale),
+                                               model.out_bytes(n))
+                if ov:
+                    dur += ov
         return dur
 
     # -- event loop ----------------------------------------------------
@@ -526,7 +615,10 @@ def simulate(
             if bn != _HOST and bs != _HOST and bn != bs:
                 n_transfers += 1
                 if rp is None:  # replayed durations already embed transfers
-                    comm = model.transfer_time(model.out_bytes(n))
+                    # stage endpoints charge their inter-stage link
+                    # instead of generic d2d (CostModel.transfer_time)
+                    comm = model.transfer_time(model.out_bytes(n),
+                                               bins[bn], bins[bs])
                     transfer_seconds += comm
             arrival[s.id] = max(arrival.get(s.id, 0.0), t + comm)
             pending[s.id] -= 1

@@ -266,7 +266,7 @@ def test_profiler_trace_format_and_roundtrip(tmp_path):
     G, ex = _profiled_run(12, seed=5, profiler=prof)
     assert len(prof.records) == len(G)          # every node reported
     trace = prof.trace()
-    assert trace["version"] == 3
+    assert trace["version"] == 4
     assert trace["meta"]["bins"] == ex.device_labels
     assert trace["meta"]["policy"] == "balanced"
     # v3: one serialized bin descriptor per slot, labels matching
