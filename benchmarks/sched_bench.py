@@ -28,6 +28,16 @@ fill/drain interleaving survives free placement.
 from ideal linear scaling to the α-β ring-collective model
 (``CostModel.collective_overhead``; 0/0 = off, baseline-identical).
 
+``--memory-bytes N`` gives every bin an ``N``-byte ``memory_bytes``
+budget (plain bins are wrapped in ``DeviceBin``): policies pack group
+footprints against it and the simulator converts overflow into forced
+spill charges.  Two gate rows cover the memory dimension:
+``memory_capped_not_worse_than_2x_uncapped`` (budgeted makespans stay
+within 2× of the unbudgeted run — spill cost is bounded, not
+pathological) when the knob is set, and ``budgets_off_bit_identical``
+(the gated policy's makespans equal the checked-in baseline EXACTLY,
+not just within tolerance) when it is off at the default config.
+
 ``--measure`` additionally executes every cell on the real executor
 (one JAX-device bin per simulated bin), fits a ``CostModel`` from the
 recorded trace, and appends measured wall-clock + the fitted
@@ -74,6 +84,7 @@ from repro.configs import DEFAULT_SCHED
 from repro.core.streams import DEFAULT_LANE_DEPTH
 from repro.sched import (
     CostModel,
+    DeviceBin,
     HostBin,
     MeshBin,
     RandomPolicy,
@@ -186,6 +197,21 @@ def parse_bins(spec: str) -> list:
         f"--bins must be an integer, mesh:NxM, or stage:N, got {spec!r}")
 
 
+def budget_bins(bins: list, memory_bytes: int) -> list:
+    """Give every bin a ``memory_bytes`` budget: execution bins get the
+    attribute set in place, plain string/device bins are wrapped in a
+    budgeted :class:`DeviceBin` (same label, so placements stay
+    comparable)."""
+    out = []
+    for b in bins:
+        if hasattr(b, "_set_memory_bytes"):
+            b._set_memory_bytes(memory_bytes)
+            out.append(b)
+        else:
+            out.append(DeviceBin(b, memory_bytes=memory_bytes))
+    return out
+
+
 def has_mesh_bin(bins: list) -> bool:
     return any(getattr(b, "kind", None) == "mesh" for b in bins)
 
@@ -242,6 +268,7 @@ def results_payload(args, results: dict[tuple[str, str], float],
         "random_seeds": args.random_seeds,
         "collective_alpha": args.collective_alpha,
         "collective_beta": args.collective_beta,
+        "memory_bytes": args.memory_bytes,
         "makespan_s": makespan_s,
         "mean_util": mean_util,
     }
@@ -263,8 +290,8 @@ def check_baseline(payload: dict, baseline: dict, *,
                 f"config mismatch on {knob!r}: baseline "
                 f"{baseline.get(knob)!r} vs run {payload.get(knob)!r} "
                 f"(re-run with matching flags or refresh the baseline)")
-    for knob in ("collective_alpha", "collective_beta"):
-        # pre-collective baselines lack the keys: absent means 0.0 (off)
+    for knob in ("collective_alpha", "collective_beta", "memory_bytes"):
+        # older baselines lack the keys: absent means 0 / 0.0 (off)
         if baseline.get(knob, 0.0) != payload.get(knob, 0.0):
             failures.append(
                 f"config mismatch on {knob!r}: baseline "
@@ -321,6 +348,12 @@ def main(argv: list[str] | None = None) -> int:
                    default=DEFAULT_SCHED.collective_beta,
                    help="ring-collective per-link bandwidth (bytes/s) "
                         "for the bytes term; 0 (default) = off")
+    p.add_argument("--memory-bytes", type=int,
+                   default=DEFAULT_SCHED.memory_bytes,
+                   help="per-bin memory budget in bytes: policies pack "
+                        "group footprints against it and the simulator "
+                        "charges forced spills for overflow; 0 (default) "
+                        "= unlimited, baseline-identical")
     p.add_argument("--measure", action="store_true",
                    help="also run every cell on the real executor, fit "
                         "a CostModel from its trace, and report measured "
@@ -345,10 +378,15 @@ def main(argv: list[str] | None = None) -> int:
                               if args.speeds else ())
     except ValueError:
         p.error(f"--speeds must be comma-separated floats, got {args.speeds!r}")
+    if args.memory_bytes < 0:
+        p.error(f"--memory-bytes must be >= 0, got {args.memory_bytes}")
+    bins_spec = args.bins
     try:
         bins = parse_bins(args.bins)
     except ValueError as e:
         p.error(str(e))
+    if args.memory_bytes:
+        bins = budget_bins(bins, args.memory_bytes)
     mesh = has_mesh_bin(bins)
     staged = has_stage_bin(bins)
     if args.measure and (mesh or staged):
@@ -412,7 +450,8 @@ def main(argv: list[str] | None = None) -> int:
                     exist_ok=True)
         baseline = {k: payload[k] for k in
                     ("version", "bins", "speeds", "host_workers",
-                     "lane_depth", "collective_alpha", "collective_beta")}
+                     "lane_depth", "collective_alpha", "collective_beta",
+                     "memory_bytes")}
         baseline["makespan_s"] = {
             shape: {GATED_POLICY: pols[GATED_POLICY]}
             for shape, pols in payload["makespan_s"].items()
@@ -533,6 +572,66 @@ def main(argv: list[str] | None = None) -> int:
         else:
             verdict = f"WARN,{bad}"
         print(f"check,overlap_not_worse_than_serialized,{verdict}")
+    if args.memory_bytes and GATED_POLICY in policies:
+        # budgeted vs unbudgeted: forced spills must cost bounded time,
+        # not blow the makespan up pathologically.  Re-score the gated
+        # policy on the same pool WITHOUT budgets and require every
+        # capped cell to stay within 2x of its uncapped twin.
+        plain = parse_bins(bins_spec)
+        bad = []
+        for shape in shapes:
+            if (shape, GATED_POLICY) not in results:
+                continue
+            ms_u, _, _ = score(GATED_POLICY, shape, plain, model,
+                               args.random_seeds, args.host_workers)
+            ms_c = results[(shape, GATED_POLICY)]
+            if ms_c > 2.0 * ms_u * (1 + 1e-9):
+                bad.append((shape, ms_c, ms_u))
+        good = not bad
+        ok &= good
+        detail = ";".join(
+            f"{s}:capped={c * 1e3:.4f}ms,uncapped={u * 1e3:.4f}ms"
+            for s, c, u in bad) or f"budget={args.memory_bytes}B"
+        print(f"check,memory_capped_not_worse_than_2x_uncapped,"
+              f"{'PASS' if good else 'FAIL'},{detail}")
+    if not args.memory_bytes and GATED_POLICY in policies:
+        # budgets off must be the legacy scheduler byte for byte: the
+        # gated policy's makespans have to equal the checked-in baseline
+        # EXACTLY (==, not within tolerance).  Config mismatches make
+        # the comparison meaningless, so they only WARN.
+        try:
+            with open(DEFAULT_BASELINE) as f:
+                base = json.load(f)
+        except (OSError, ValueError) as e:
+            base = None
+            print(f"check,budgets_off_bit_identical,WARN,"
+                  f"unreadable baseline: {e}")
+        if base is not None:
+            mismatch = [k for k in ("bins", "speeds", "host_workers",
+                                    "lane_depth")
+                        if base.get(k) != payload.get(k)]
+            mismatch += [k for k in ("collective_alpha", "collective_beta",
+                                     "memory_bytes")
+                         if base.get(k, 0.0) != payload.get(k, 0.0)]
+            if mismatch:
+                print(f"check,budgets_off_bit_identical,WARN,"
+                      f"config mismatch on {mismatch}")
+            else:
+                bad = []
+                for shape, pols in sorted(base.get("makespan_s",
+                                                   {}).items()):
+                    if GATED_POLICY not in pols:
+                        continue
+                    cur = payload["makespan_s"].get(shape, {}) \
+                                               .get(GATED_POLICY)
+                    if cur is not None and cur != pols[GATED_POLICY]:
+                        bad.append((shape, cur, pols[GATED_POLICY]))
+                good = not bad
+                ok &= good
+                detail = ";".join(f"{s}:run={c!r},baseline={b!r}"
+                                  for s, c, b in bad) or DEFAULT_BASELINE
+                print(f"check,budgets_off_bit_identical,"
+                      f"{'PASS' if good else 'FAIL'},{detail}")
 
     if args.check_baseline:
         try:

@@ -219,6 +219,14 @@ class SchedConfig:
     EFT instead of the ideal linear ``device_count`` speedup.  Both
     default 0 = overhead off (baselines reproduce bit-for-bit);
     ``sched_bench --collective-alpha/--collective-beta`` sweeps them.
+
+    ``memory_bytes`` (> 0) gives every execution bin a byte budget
+    (``ExecutionBin.memory_bytes``): policies pack group footprints
+    against it, the simulator converts overflow into forced-spill
+    charges, and the executor caps each bin's buddy arena at the
+    largest power of two under it.  0 = unlimited (the default — all
+    pre-existing baselines reproduce bit-for-bit);
+    ``sched_bench --memory-bytes`` sweeps it.
     """
     policy: str = "balanced"
     host_workers: int = 4
@@ -229,6 +237,7 @@ class SchedConfig:
     trace_path: str = ""
     collective_alpha: float = 0.0
     collective_beta: float = 0.0
+    memory_bytes: int = 0
 
 
 DEFAULT_SCHED = SchedConfig()

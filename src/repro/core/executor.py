@@ -27,7 +27,7 @@ import itertools
 import random
 import threading
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from concurrent.futures import Future
 from typing import Any, Callable, Sequence
 
@@ -35,7 +35,7 @@ import jax
 import numpy as np
 
 from .graph import Heteroflow, KernelTask, Node, PullTask, TaskType, _span_view
-from .memory import DeviceArena
+from .memory import DeviceArena, OutOfMemory
 from .placement import estimate_node_cost
 from .streams import (LaneRegistry, ScopedDeviceContext, bin_labels,
                       dedup_labels, execution_target)
@@ -193,10 +193,25 @@ class Executor:
         self._busy_snapshot: dict[str, float] = {}
         self._busy_lock = threading.Lock()
         self.lanes = LaneRegistry()
-        self.arenas = (
-            {id(d): DeviceArena(d, arena_bytes) for d in self.devices}
-            if arena_bytes else {}
-        )
+        # per-bin buddy arenas: a bin with a memory_bytes budget gets an
+        # arena capped at the largest power of two NOT exceeding the
+        # budget (buddy capacity must be pow2; rounding up would bust
+        # the budget), even without a global arena_bytes.  Unbudgeted
+        # bins keep the legacy arena_bytes-or-nothing rule.
+        self.arenas = {}
+        for d in self.devices:
+            cap = self._arena_capacity(d, arena_bytes)
+            if cap:
+                self.arenas[id(d)] = DeviceArena(
+                    d, cap, min_block=min(4096, cap))
+        # spill-to-host state: per-arena LRU of resident pull nodes
+        # (insertion/touch order = coldest first), spill/refill counters
+        self._resident: dict[int, OrderedDict[int, Node]] = {}
+        self._mem_lock = threading.Lock()
+        self._spills = 0
+        self._refills = 0
+        self._spilled_bytes = 0
+        self._refilled_bytes = 0
 
         self._workers = [_Worker(i) for i in range(num_workers)]
         for w in self._workers:
@@ -221,6 +236,20 @@ class Executor:
                                  name=f"hetflow-worker-{w.id}", daemon=True)
             w.thread = t
             t.start()
+
+    @staticmethod
+    def _arena_capacity(d: Any, arena_bytes: int | None) -> int | None:
+        """Arena capacity for bin ``d``: its ``memory_bytes`` budget
+        floored to a power of two (so ``bytes_in_use`` can never exceed
+        the budget), further capped by ``arena_bytes`` when both are
+        given; plain ``arena_bytes`` when the bin is unbudgeted."""
+        budget = getattr(d, "memory_bytes", None)
+        if budget is None:
+            return arena_bytes
+        cap = 1 << (int(budget).bit_length() - 1)
+        if arena_bytes:
+            cap = min(cap, arena_bytes)
+        return cap
 
     # ------------------------------------------------------------------
     # public API (paper §III-B)
@@ -341,6 +370,18 @@ class Executor:
             "executed": sum(w.executed for w in self._workers),
             "replacements": self._replacements,
             "bin_busy_s": self._merged_bin_busy(),
+            # arena memory pressure (spill-to-host path): eviction /
+            # refill round trips and per-bin high-water bytes — peaks
+            # can never exceed a budgeted bin's memory_bytes (the arena
+            # is capacity-capped below the budget)
+            "spills": self._spills,
+            "refills": self._refills,
+            "spilled_bytes": self._spilled_bytes,
+            "refilled_bytes": self._refilled_bytes,
+            "arena_peak_bytes": {
+                label: self.arenas[id(d)].peak_bytes
+                for d, label in zip(self.devices, self.device_labels)
+                if id(d) in self.arenas},
             # keyed by the run-stable bin label, not enumeration order —
             # profiler traces correlate lane state across runs by this id
             "lane_depths": {key: lane.depth()
@@ -507,15 +548,29 @@ class Executor:
         ``sharding=`` pin still overrides everything.
         """
         host = _span_view(node.state["source"], node.state.get("size"))
-        sharding = node.state.get("sharding")
-        eff = execution_target(node.device)  # stage slots → member bin
-        kind = getattr(eff, "kind", None)
         lane = self.lanes.lane(node.device)
         arena = self.arenas.get(id(node.device))
-        if kind == "host" and sharding is None:
+        buf = self._device_put(node, host)
+        if buf is host:                     # host bin: span stays put
             node.state["device_data"] = host
             lane.record(host)
             return
+        node.state.pop("spilled", None)     # fresh pull supersedes a spill
+        if arena is not None and "arena_off" not in node.state:
+            node.state["arena_off"] = self._arena_allocate(
+                node.device, arena, node, max(host.nbytes, 1))
+        node.state["device_data"] = buf
+        lane.record(buf)
+
+    def _device_put(self, node: Node, host: np.ndarray) -> Any:
+        """Transfer ``host`` onto ``node``'s assigned bin (shared by the
+        pull path and the spill-refill path).  Returns ``host`` itself
+        for host bins — the no-transfer case."""
+        sharding = node.state.get("sharding")
+        eff = execution_target(node.device)  # stage slots → member bin
+        kind = getattr(eff, "kind", None)
+        if kind == "host" and sharding is None:
+            return host
         if sharding is not None:
             target = sharding
         elif kind is not None:
@@ -524,13 +579,95 @@ class Executor:
             target = eff
         with ScopedDeviceContext(node.device):
             if target is not None:
-                buf = jax.device_put(host, target)
-            else:
-                buf = jax.device_put(host)
-        if arena is not None and "arena_off" not in node.state:
-            node.state["arena_off"] = arena.allocate(max(host.nbytes, 1))
-        node.state["device_data"] = buf
-        lane.record(buf)
+                return jax.device_put(host, target)
+            return jax.device_put(host)
+
+    # ------------------------------------------------------------------
+    # arena memory pressure: spill-to-host + refill-on-demand
+    # ------------------------------------------------------------------
+    def _arena_allocate(self, device: Any, arena: DeviceArena, node: Node,
+                        nbytes: int) -> int:
+        """Allocate ``nbytes`` for ``node``, evicting the coldest other
+        resident pull buffers to host on :class:`OutOfMemory` (StarPU
+        eviction: budgets are honored by spilling, not by crashing).
+        Re-raises only when the arena cannot fit the request even empty.
+        """
+        while True:
+            try:
+                off = arena.allocate(nbytes)
+            except OutOfMemory:
+                victim = None
+                with self._mem_lock:
+                    residents = self._resident.setdefault(
+                        id(device), OrderedDict())
+                    for nid in residents:            # insertion order: coldest
+                        if nid != node.id:
+                            victim = residents[nid]
+                            break
+                if victim is None:
+                    raise
+                self._spill(device, arena, victim)
+                continue
+            with self._mem_lock:
+                residents = self._resident.setdefault(id(device),
+                                                      OrderedDict())
+                residents[node.id] = node
+                residents.move_to_end(node.id)
+            return off
+
+    def _spill(self, device: Any, arena: DeviceArena, victim: Node) -> None:
+        """Evict one resident pull: free its arena block and demote its
+        device buffer to a host copy (D2H).  Consumers still work — a
+        kernel touching the host copy triggers a refill (H2D) in
+        ``_convert``; a push reads the host copy directly."""
+        t0 = time.perf_counter()
+        with self._mem_lock:
+            off = victim.state.pop("arena_off", None)
+            if off is None:                  # lost the race: already gone
+                return
+            self._resident.get(id(device), OrderedDict()).pop(
+                victim.id, None)
+            buf = victim.state.get("device_data")
+            nbytes = 0
+            if buf is not None and not isinstance(buf, np.ndarray):
+                host = np.asarray(jax.device_get(buf))
+                victim.state["device_data"] = host
+                nbytes = host.nbytes
+            victim.state["spilled"] = True
+            self._spills += 1
+            self._spilled_bytes += nbytes
+        arena.free(off)
+        if self._profiler is not None and hasattr(self._profiler,
+                                                  "record_event"):
+            self._profiler.record_event(
+                "spill", bin=victim.bin_key, bytes=nbytes,
+                start=t0, end=time.perf_counter())
+
+    def _refill(self, node: Node) -> Any:
+        """Re-pull a spilled buffer onto its bin (H2D), re-charging the
+        arena — the on-demand half of the spill round trip."""
+        t0 = time.perf_counter()
+        with self._mem_lock:
+            if not node.state.get("spilled"):    # raced with another refill
+                return node.state.get("device_data")
+            host = node.state["device_data"]
+            del node.state["spilled"]
+        buf = self._device_put(node, host)
+        arena = self.arenas.get(id(node.device))
+        nbytes = int(getattr(host, "nbytes", 0))
+        if arena is not None and buf is not host:
+            node.state["arena_off"] = self._arena_allocate(
+                node.device, arena, node, max(nbytes, 1))
+        with self._mem_lock:
+            node.state["device_data"] = buf
+            self._refills += 1
+            self._refilled_bytes += nbytes
+        if self._profiler is not None and hasattr(self._profiler,
+                                                  "record_event"):
+            self._profiler.record_event(
+                "refill", bin=node.bin_key, bytes=nbytes,
+                start=t0, end=time.perf_counter())
+        return buf
 
     def _invoke_push(self, w: _Worker, node: Node) -> None:
         """D2H: copy the *source pull task's* device buffer to the host
@@ -576,6 +713,15 @@ class Executor:
     def _convert(self, arg: Any) -> Any:
         """Paper's ``convert``/PointerCaster: task handle → device datum."""
         if isinstance(arg, PullTask):
+            node = arg._node
+            if node.state.get("spilled"):
+                return self._refill(node)
+            if self.arenas and "arena_off" in node.state:
+                # LRU touch: a consumed resident is the warmest
+                with self._mem_lock:
+                    residents = self._resident.get(id(node.device))
+                    if residents is not None and node.id in residents:
+                        residents.move_to_end(node.id)
             return arg.device_data()
         if isinstance(arg, KernelTask):
             res = arg._node.state.get("result")
@@ -691,4 +837,8 @@ class Executor:
                 if arena is not None:
                     arena.free(off)
                 del n.state["arena_off"]
+                with self._mem_lock:
+                    residents = self._resident.get(id(old_device[n.id]))
+                    if residents is not None:
+                        residents.pop(n.id, None)
         self._replacements += 1

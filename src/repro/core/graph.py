@@ -286,6 +286,7 @@ class Heteroflow:
     def kernel(self, fn: Callable[..., Any], *args: Any,
                writes: Sequence[PullTask] = (), cost: float | None = None,
                requires: Sequence[str] = (), stage: int | None = None,
+               activation_bytes: int | None = None,
                name: str | None = None) -> KernelTask:
         """Create a kernel task offloading ``fn(*args)`` to a device.
 
@@ -314,12 +315,22 @@ class Heteroflow:
         stage atomically — the mechanism ``distributed.pipeline`` emits
         its cells with, replacing hand-pinned stage placement.  It is an
         identity, not a pin: the scheduler still chooses the bin.
+
+        ``activation_bytes`` declares the kernel's peak *resident*
+        working-set bytes beyond its operand spans (intermediate
+        activations).  Memory-budgeted scheduling
+        (``repro.sched.bins`` ``memory_bytes``) charges it — together
+        with the group's pull spans — against a candidate bin's byte
+        budget; the default 0 keeps kernels footprint-free, the
+        pre-budget behavior.
         """
         node = self._add(TaskType.KERNEL, name)
         sources = [a._node for a in args if isinstance(a, PullTask)]
         node.state.update(fn=fn, args=args, sources=sources, writes=tuple(writes))
         if cost is not None:
             node.state["cost"] = float(cost)
+        if activation_bytes is not None:
+            node.state["activation_bytes"] = int(activation_bytes)
         if requires:
             if isinstance(requires, str):       # requires="mesh" is one
                 requires = (requires,)          # tag, not four letters

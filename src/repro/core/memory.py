@@ -51,6 +51,7 @@ class BuddyAllocator:
         self._alloc: dict[int, int] = {}  # offset -> level
         self._lock = threading.Lock()
         self._in_use = 0
+        self.peak_in_use = 0   # high-water bytes_in_use over the lifetime
         self.n_allocs = 0
         self.n_splits = 0
         self.n_merges = 0
@@ -87,6 +88,8 @@ class BuddyAllocator:
                 self.n_splits += 1
             self._alloc[off] = want
             self._in_use += self._level_size(want)
+            if self._in_use > self.peak_in_use:
+                self.peak_in_use = self._in_use
             self.n_allocs += 1
             return off
 
@@ -176,3 +179,10 @@ class DeviceArena:
     @property
     def bytes_in_use(self) -> int:
         return self.allocator.bytes_in_use
+
+    @property
+    def peak_bytes(self) -> int:
+        """High-water ``bytes_in_use`` — never exceeds ``capacity`` (the
+        allocator raises :class:`OutOfMemory` instead), which is how the
+        executor proves it honored a bin's ``memory_bytes`` budget."""
+        return self.allocator.peak_in_use

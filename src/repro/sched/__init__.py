@@ -50,6 +50,7 @@ from .base import (
     build_groups,
     get_scheduler,
     group_candidates,
+    node_footprint,
     register,
 )
 from .bins import (
@@ -59,6 +60,7 @@ from .bins import (
     MeshBin,
     StageBin,
     bin_capabilities,
+    bin_memory_bytes,
     bins_from_trace,
     describe_bin,
     eligible_bins,
@@ -80,9 +82,11 @@ from .simulator import CostModel, SimReport, simulate
 __all__ = [
     "Scheduler", "TaskGroup", "build_groups", "apply_assignment",
     "register", "get_scheduler", "available_policies", "group_candidates",
+    "node_footprint",
     "ExecutionBin", "DeviceBin", "HostBin", "MeshBin", "StageBin",
     "stage_bins", "stage_link", "execution_target",
-    "bin_capabilities", "eligible_bins", "describe_bin", "bins_from_trace",
+    "bin_capabilities", "bin_memory_bytes", "eligible_bins", "describe_bin",
+    "bins_from_trace",
     "BalancedBins", "Heft", "RoundRobin", "RandomPolicy",
     "CostModel", "SimReport", "simulate",
     "TaskProfiler", "TaskRecord", "load_trace", "node_bytes",

@@ -26,7 +26,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Hashable, Mapping, Sequence
 
 from repro.core.graph import Heteroflow, Node, TaskType
-from repro.core.placement import UnionFind, estimate_node_cost
+from repro.core.placement import UnionFind, _nbytes, estimate_node_cost
 from repro.core.streams import bin_labels
 
 from .bins import eligible_bins
@@ -39,6 +39,7 @@ __all__ = [
     "bin_index",
     "bin_load",
     "group_candidates",
+    "node_footprint",
     "register",
     "get_scheduler",
     "available_policies",
@@ -71,6 +72,27 @@ class TaskGroup:
     #: untagged groups.  Advisory, not a pin — policies use it for
     #: stage-affinity packing (adjacent stages prefer cheap links).
     stage_id: int | None = None
+    #: estimated resident footprint in bytes (pull operand spans plus
+    #: kernel ``activation_bytes``) — the unit memory-budgeted policies
+    #: and the simulator charge against ``bin_memory_bytes``.  Zero when
+    #: no member declares a span (budget checks then never bind).
+    bytes: int = 0
+
+
+def node_footprint(t: Node) -> int:
+    """Resident bytes a scheduled node contributes to its bin.
+
+    PULL tasks contribute their operand span (``_nbytes`` over the
+    declared source/size — same estimate ``estimate_node_cost`` charges
+    for the copy); KERNEL tasks contribute their declared
+    ``activation_bytes`` working set.  Everything else is free: host
+    tasks run out-of-arena and push tasks stream.
+    """
+    if t.type == TaskType.PULL:
+        return int(_nbytes(t.state.get("source"), t.state.get("size")))
+    if t.type == TaskType.KERNEL:
+        return int(t.state.get("activation_bytes", 0))
+    return 0
 
 
 def build_groups(graph: Heteroflow, cost_fn: CostFn = estimate_node_cost,
@@ -114,6 +136,7 @@ def build_groups(graph: Heteroflow, cost_fn: CostFn = estimate_node_cost,
             g = groups[r] = TaskGroup(root=r, order=len(groups))
         g.nodes.append(t)
         g.cost += cost_fn(t)
+        g.bytes += node_footprint(t)
         req = t.state.get("requires")
         if req:
             g.requires = g.requires | req

@@ -50,6 +50,7 @@ __all__ = [
     "ExecutionBin", "DeviceBin", "HostBin", "MeshBin", "StageBin",
     "stage_bins", "stage_link", "execution_target",
     "bin_kind", "bin_capabilities", "bin_lane_width", "bin_compute_scale",
+    "bin_memory_bytes",
     "eligible_bins", "node_requires", "mesh_wide",
     "describe_bin", "bin_from_descriptor", "bins_from_trace",
 ]
@@ -77,6 +78,20 @@ class ExecutionBin:
     label: str = ""
     capabilities: frozenset[str] = frozenset({"device"})
     device_count: int = 1
+    #: optional byte budget (StarPU memory-node capacity): the resident
+    #: footprint the scheduler/simulator may charge against this bin.
+    #: ``None`` (the default everywhere) means *unlimited* — every
+    #: pre-budget placement and simulation reproduces bit-for-bit.
+    memory_bytes: int | None = None
+
+    def _set_memory_bytes(self, memory_bytes: int | None) -> None:
+        if memory_bytes is not None:
+            memory_bytes = int(memory_bytes)
+            if memory_bytes <= 0:
+                raise ValueError(
+                    f"memory_bytes must be positive or None (= unlimited), "
+                    f"got {memory_bytes!r}")
+        self.memory_bytes = memory_bytes
 
     def _eq_key(self) -> tuple:
         return (type(self), self.kind, self.label)
@@ -94,10 +109,14 @@ class ExecutionBin:
         return None
 
     def describe(self) -> dict[str, Any]:
-        """JSON-serializable descriptor (trace v3 ``meta.bin_descriptors``)."""
-        return {"kind": self.kind, "label": self.label,
-                "capabilities": sorted(self.capabilities),
-                "device_count": self.device_count}
+        """JSON-serializable descriptor (trace v3 ``meta.bin_descriptors``;
+        v5 adds ``memory_bytes`` when a budget is set)."""
+        d = {"kind": self.kind, "label": self.label,
+             "capabilities": sorted(self.capabilities),
+             "device_count": self.device_count}
+        if self.memory_bytes is not None:
+            d["memory_bytes"] = self.memory_bytes
+        return d
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return f"<{type(self).__name__} {self.label!r}>"
@@ -112,7 +131,8 @@ class DeviceBin(ExecutionBin):
 
     kind = "device"
 
-    def __init__(self, device: Any, *, label: str | None = None):
+    def __init__(self, device: Any, *, label: str | None = None,
+                 memory_bytes: int | None = None):
         self.device = device
         from repro.core.streams import device_key  # local: streams is light
         self.label = label or device_key(device)
@@ -122,6 +142,7 @@ class DeviceBin(ExecutionBin):
         if platform:
             caps.add(platform)
         self.capabilities = frozenset(caps)
+        self._set_memory_bytes(memory_bytes)
 
     def put_target(self) -> Any:
         return self.device if isinstance(self.device, jax.Device) else None
@@ -135,9 +156,11 @@ class HostBin(ExecutionBin):
 
     kind = "host"
 
-    def __init__(self, *, label: str = "host"):
+    def __init__(self, *, label: str = "host",
+                 memory_bytes: int | None = None):
         self.label = label
         self.capabilities = frozenset({"host"})
+        self._set_memory_bytes(memory_bytes)
 
     def put_target(self) -> Any:
         return None
@@ -163,7 +186,8 @@ class MeshBin(ExecutionBin):
 
     def __init__(self, name: str, axis_shape: Mapping[str, int], *,
                  mesh: Any = None, spec: Any = None,
-                 capabilities: Sequence[str] = ()):
+                 capabilities: Sequence[str] = (),
+                 memory_bytes: int | None = None):
         if not axis_shape:
             raise ValueError("MeshBin needs a non-empty axis_shape")
         self.label = name
@@ -179,6 +203,10 @@ class MeshBin(ExecutionBin):
                 caps.add(d.platform)
                 break
         self.capabilities = frozenset(caps)
+        # the budget is the SLICE aggregate (sum over member devices) —
+        # the resident set a replicated pull occupies on every member is
+        # the caller's to model via the footprint it charges
+        self._set_memory_bytes(memory_bytes)
 
     def _eq_key(self) -> tuple:
         return (type(self), self.kind, self.label,
@@ -267,7 +295,8 @@ class StageBin(ExecutionBin):
     def __init__(self, stage_id: int, member: Any, *,
                  link_bandwidth: float | None = None,
                  link_latency_s: float | None = None,
-                 label: str | None = None):
+                 label: str | None = None,
+                 memory_bytes: int | None = None):
         # only None means "fall back to the cost model" — a zero
         # bandwidth would silently model as full-speed d2d otherwise
         if link_bandwidth is not None and link_bandwidth <= 0:
@@ -288,6 +317,10 @@ class StageBin(ExecutionBin):
         self.label = label
         self.device_count = bin_lane_width(member)
         self.capabilities = frozenset({"stage"} | bin_capabilities(member))
+        # a stage slot's capacity is its member's unless overridden (the
+        # stage is a scheduling identity; the member owns the memory)
+        self._set_memory_bytes(memory_bytes if memory_bytes is not None
+                               else bin_memory_bytes(member))
 
     def _eq_key(self) -> tuple:
         return (type(self), self.kind, self.label, self.stage_id)
@@ -365,6 +398,14 @@ def bin_compute_scale(b: Any) -> float:
     return float(getattr(b, "device_count", 1))
 
 
+def bin_memory_bytes(b: Any) -> int | None:
+    """Byte budget of a bin; ``None`` = unlimited (every raw/legacy bin,
+    and every ExecutionBin constructed without ``memory_bytes=``) — the
+    pre-budget behavior, so existing placements reproduce bit-for-bit."""
+    m = getattr(b, "memory_bytes", None)
+    return int(m) if m is not None else None
+
+
 def eligible_bins(requires: frozenset[str], bins: Sequence[Any]) -> list[int]:
     """Bin indices whose capabilities satisfy ``requires`` (StarPU-style
     per-codelet eligibility; an empty tag set is eligible everywhere)."""
@@ -402,7 +443,8 @@ def mesh_wide(node: Node, b: Any) -> bool:
 # trace v3 descriptors
 # ----------------------------------------------------------------------
 def describe_bin(b: Any) -> dict[str, Any]:
-    """Serializable descriptor for any bin object (trace v3)."""
+    """Serializable descriptor for any bin object (trace v3; v5 carries
+    ``memory_bytes`` for budgeted bins)."""
     if isinstance(b, ExecutionBin):
         return b.describe()
     from repro.core.streams import device_key
@@ -415,9 +457,10 @@ def bin_from_descriptor(desc: Mapping[str, Any]) -> ExecutionBin:
 
     Mesh bins come back *synthetic* (no live ``Mesh``) — enough for the
     simulator's replay/cost model, which only needs kind, label, shape,
-    and capabilities."""
+    capabilities, and (v5) the byte budget."""
     kind = desc.get("kind", "device")
     label = desc.get("label", "")
+    mem = desc.get("memory_bytes")  # absent in v1-v4 → unlimited
     if kind == "stage":
         member = desc.get("member")
         b = StageBin(int(desc.get("stage_id", 0)),
@@ -425,20 +468,21 @@ def bin_from_descriptor(desc: Mapping[str, Any]) -> ExecutionBin:
                      else DeviceBin(label, label=label),
                      link_bandwidth=desc.get("link_bandwidth"),
                      link_latency_s=desc.get("link_latency_s"),
-                     label=label or None)
+                     label=label or None, memory_bytes=mem)
         b.device_count = int(desc.get("device_count", b.device_count))
         if desc.get("capabilities"):
             b.capabilities = frozenset(desc["capabilities"])
         return b
     if kind == "host":
-        return HostBin(label=label or "host")
+        return HostBin(label=label or "host", memory_bytes=mem)
     if kind == "mesh":
-        b = MeshBin(label or "mesh", desc.get("axis_shape") or {"_": 1})
+        b = MeshBin(label or "mesh", desc.get("axis_shape") or {"_": 1},
+                    memory_bytes=mem)
         b.device_count = int(desc.get("device_count", b.device_count))
         if desc.get("capabilities"):
             b.capabilities = frozenset(desc["capabilities"])
         return b
-    b = DeviceBin(label, label=label)
+    b = DeviceBin(label, label=label, memory_bytes=mem)
     if desc.get("capabilities"):
         b.capabilities = frozenset(desc["capabilities"])
     return b

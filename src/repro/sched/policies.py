@@ -24,10 +24,21 @@ from typing import Any, Hashable, Mapping, Sequence
 from repro.core.graph import Heteroflow, Node, TaskType
 
 from .base import Scheduler, TaskGroup, bin_load, group_candidates, register
-from .bins import bin_compute_scale, bin_lane_width, stage_link
+from .bins import (bin_compute_scale, bin_lane_width, bin_memory_bytes,
+                   stage_link)
 from .simulator import CostModel
 
 __all__ = ["BalancedBins", "Heft", "RoundRobin", "RandomPolicy"]
+
+
+def _over_budget(g: TaskGroup, cap: int | None, packed: int) -> int:
+    """1 when packing ``g``'s footprint onto a bin that already holds
+    ``packed`` bytes would bust its ``memory_bytes`` budget, else 0.
+    Always 0 for unbudgeted bins (cap None) or zero-footprint groups, so
+    memory-blind orderings are untouched when budgets are off."""
+    if cap is None or g.bytes <= 0:
+        return 0
+    return 1 if packed + g.bytes > cap else 0
 
 
 def _mesh_scale(g: TaskGroup, b: object) -> float:
@@ -80,6 +91,11 @@ class BalancedBins(Scheduler):
     among equally loaded bins, the one with the cheapest link to the
     group's already-placed adjacent stages wins — untagged graphs keep
     the seed-identical ``(load, index)`` ordering bit-for-bit.
+    Budgeted bins (``memory_bytes``) pack group *bytes* alongside cost:
+    a bin the group's footprint would bust ranks behind every bin with
+    room (the leading key term), so packing spreads by memory pressure
+    before load; with budgets off the flag is constantly 0 and the seed
+    ordering is bit-identical.
     """
 
     name = "balanced"
@@ -90,13 +106,16 @@ class BalancedBins(Scheduler):
                ) -> dict[Hashable, int]:
         load: dict[int, float] = {i: bin_load(initial_load, bins, i)
                                   for i in range(len(bins))}
+        caps = [bin_memory_bytes(b) for b in bins]
+        packed = [0] * len(bins)
         assignment: dict[Hashable, int] = {}
         placed_stage: dict[int, int] = {}
         for g in sorted(groups, key=lambda g: -g.cost):
             idx = self._pinned_index(g, bins)
             if idx is None:
                 idx = min(group_candidates(g, bins),
-                          key=lambda i: (load[i],
+                          key=lambda i: (_over_budget(g, caps[i], packed[i]),
+                                         load[i],
                                          _stage_affinity_penalty(
                                              g, i, bins, placed_stage),
                                          i))
@@ -104,6 +123,7 @@ class BalancedBins(Scheduler):
             if g.stage_id is not None:
                 placed_stage[g.stage_id] = idx
             load[idx] += g.cost / _mesh_scale(g, bins[idx])
+            packed[idx] += g.bytes
         return assignment
 
 
@@ -192,6 +212,14 @@ class Heft(Scheduler):
     Transfers between stage bins are charged over their inter-stage
     links (``CostModel.transfer_time``), so adjacent stages land on
     cheap links: exactly the trade-off the simulator scores.
+
+    Budgeted bins (``memory_bytes``) are memory-aware: a candidate whose
+    remaining budget the group's footprint would bust has the eviction
+    round trip of the overflow (``CostModel.spill_time``) added to its
+    EFT — the same charge the simulator levies for a forced spill — so
+    a bin with room wins unless it is slower by more than the spill
+    costs.  With budgets off no penalty is ever added and EFT decisions
+    are bit-identical to the memory-blind model.
     """
 
     name = "heft"
@@ -275,6 +303,8 @@ class Heft(Scheduler):
         # simulator's multi-server lane model exactly.
         overlap = model.lane_depth >= 2
         widths = [bin_lane_width(b) for b in bins]
+        caps = [bin_memory_bytes(b) for b in bins]
+        packed = [0] * n_bins
         init_s = [bin_load(initial_load, bins, i)
                   / (model.compute_rate * (model.speed(i) or 1.0))
                   for i in range(n_bins)]
@@ -341,6 +371,10 @@ class Heft(Scheduler):
                              if g_pull_t > 0 else data_ready)
                 eft = (max(copy_done, compute_avail) + kern_t
                        if kern_t > 0 else max(copy_done, copy_avail))
+                if caps[i] is not None and g.bytes > 0:
+                    over = packed[i] + g.bytes - caps[i]
+                    if over > 0:   # eviction penalty: the spill round
+                        eft += model.spill_time(over)  # trip sim charges
                 if best is None or eft < best[1]:
                     best = (i, eft, copy_done, kern_t)
             idx, eft, copy_done, kern_t = best
@@ -354,6 +388,7 @@ class Heft(Scheduler):
 
             assignment[g.root] = idx
             placed[g.root] = idx
+            packed[idx] += g.bytes
             finish[g.root] = eft
             start_c[g.root] = eft - kern_t
             cell_t[g.root] = kern_t / max(n_cells[g.root], 1)

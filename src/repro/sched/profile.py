@@ -63,9 +63,15 @@ the inter-stage **link** figures (``link_bandwidth`` /
 ``link_latency_s``) — enough for ``bins_from_trace`` to rebuild the
 stage pool and for ``CostModel.fit`` to calibrate
 ``stage_link_bandwidth`` from the excess duration of kernels that ran
-on stage bins with cross-bin operands.  Version-1/-2/-3 traces still
-load; readers treat the missing fields as 0 / plain device bins / no
-tags / no stages.
+on stage bins with cross-bin operands.  Version 5 adds the memory
+dimension: an optional ``memory_bytes`` budget on bin descriptors
+(``bins_from_trace`` restores it), and a top-level ``events`` list of
+executor arena **spill/refill** records —
+``{"type": "spill"|"refill", "bin": label, "bytes": n,
+"start": t0, "end": t1}`` — which ``CostModel.fit`` uses to calibrate
+``spill_bandwidth``.  Version-1…-4 traces still load; readers treat
+the missing fields as 0 / plain device bins / no tags / no stages /
+no budgets / no events.
 """
 from __future__ import annotations
 
@@ -81,11 +87,13 @@ from repro.core.placement import _nbytes
 __all__ = ["TaskRecord", "TaskProfiler", "node_bytes", "producer_bytes",
            "cross_bin_bytes", "load_trace"]
 
-TRACE_VERSION = 4
+TRACE_VERSION = 5
 #: versions load_trace accepts (v1 lacks xfer_bytes — readers default it
 #: 0; v1/v2 lack meta.bin_descriptors — readers assume plain device
-#: bins; v1-v3 lack per-record stage ids — readers assume no stages)
-SUPPORTED_TRACE_VERSIONS = (1, 2, 3, 4)
+#: bins; v1-v3 lack per-record stage ids — readers assume no stages;
+#: v1-v4 lack bin memory budgets and spill/refill events — readers
+#: assume unlimited memory and no spills)
+SUPPORTED_TRACE_VERSIONS = (1, 2, 3, 4, 5)
 
 
 def node_bytes(node: Node) -> int:
@@ -173,6 +181,7 @@ class TaskProfiler:
         self._records: list[TaskRecord] = []
         self._lanes: dict[str, dict[str, Any]] = {}
         self._meta: dict[str, Any] = {}
+        self._events: list[dict[str, Any]] = []
 
     # -- collection (executor side) ------------------------------------
     def record(self, node: Node, *, worker: int, iteration: int,
@@ -194,6 +203,17 @@ class TaskProfiler:
         )
         with self._lock:
             self._records.append(rec)
+
+    def record_event(self, type: str, *, bin: str | None, bytes: int,
+                     start: float, end: float) -> None:
+        """Record a non-node runtime event (v5): arena ``spill`` /
+        ``refill`` round trips the executor's memory-pressure path
+        performs.  Shares the records' monotonic clock and is rebased
+        with them at export."""
+        with self._lock:
+            self._events.append({"type": str(type), "bin": bin,
+                                 "bytes": int(bytes),
+                                 "start": float(start), "end": float(end)})
 
     def finalize(self, executor: Any) -> None:
         """Snapshot executor metadata + per-device lane counters.
@@ -233,6 +253,7 @@ class TaskProfiler:
     def clear(self) -> None:
         with self._lock:
             self._records.clear()
+            self._events.clear()
             self._lanes = {}
 
     def makespan(self) -> float:
@@ -254,10 +275,15 @@ class TaskProfiler:
     def trace(self) -> dict[str, Any]:
         """The versioned JSON-serializable trace dict."""
         recs = self.records
-        t0 = min((r.start for r in recs), default=0.0)
         with self._lock:
             lanes = {k: dict(v) for k, v in self._lanes.items()}
             meta = dict(self._meta)
+            events = [dict(e) for e in self._events]
+        t0 = min((r.start for r in recs),
+                 default=min((e["start"] for e in events), default=0.0))
+        for e in events:
+            e["start"] -= t0
+            e["end"] -= t0
         # lane timestamps share the records' perf_counter clock; rebase
         # them onto the same t=0 origin as the records
         for snap in lanes.values():
@@ -286,6 +312,9 @@ class TaskProfiler:
                 for r in recs
             ],
             "lanes": lanes,
+            # v5: arena spill/refill events (empty list when the run
+            # never hit memory pressure)
+            "events": events,
         }
 
     def save(self, path: str) -> None:

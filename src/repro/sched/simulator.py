@@ -54,7 +54,9 @@ from repro.core.graph import Heteroflow, Node, TaskType
 from repro.core.placement import _nbytes, estimate_node_cost
 from repro.core.streams import COMPUTE_LANE, COPY_LANE, DEFAULT_LANE_DEPTH
 
-from .bins import bin_compute_scale, bin_lane_width, mesh_wide, stage_link
+from .base import node_footprint
+from .bins import (bin_compute_scale, bin_lane_width, bin_memory_bytes,
+                   mesh_wide, stage_link)
 from .profile import producer_bytes
 
 __all__ = ["CostModel", "SimReport", "simulate"]
@@ -102,6 +104,11 @@ class CostModel:
     #: ``latency + cost / (rate * speed)``, unseen names fall back to
     #: the aggregate ``compute_rate``.
     kernel_rates: tuple[tuple[str, float, float], ...] = ()
+    #: bytes/s of the spill path (device→host eviction + later host→
+    #: device refill).  Calibrated by :meth:`fit` from the spill/refill
+    #: events version-5 traces record; 0 = unset → fall back to
+    #: ``h2d_bandwidth`` (the spill path rides the same PCIe link).
+    spill_bandwidth: float = 0.0
     cost_fn: Callable[[Node], float] = estimate_node_cost
 
     def __post_init__(self) -> None:
@@ -152,6 +159,15 @@ class CostModel:
         if nbytes <= 0:
             return lat
         return lat + nbytes / bw
+
+    def spill_time(self, nbytes: int) -> float:
+        """Seconds a forced eviction of ``nbytes`` costs: a D2H write now
+        plus the H2D refill the victim pays when next consumed — the
+        round trip StarPU's memory nodes charge for an eviction."""
+        if nbytes <= 0:
+            return 0.0
+        bw = self.spill_bandwidth or self.h2d_bandwidth
+        return 2.0 * (self.latency_s + nbytes / bw)
 
     def collective_overhead(self, n_devices: int, nbytes: int) -> float:
         """Extra seconds a sharded (mesh-wide) task pays to synchronize
@@ -356,6 +372,20 @@ class CostModel:
             updates["host_time_s"] = (
                 sum(r["end"] - r["start"] for r in hosts) / len(hosts))
 
+        # spill path: v5 traces record executor arena evictions/refills
+        # as events with bytes + timestamps — the observed round-trip
+        # rate calibrates spill_bandwidth (older traces have no events
+        # list and keep the base value)
+        spills = [e for e in trace.get("events", ())
+                  if e.get("type") in ("spill", "refill")
+                  and e.get("bytes", 0) > 0]
+        if spills:
+            sp_bytes = sum(e["bytes"] for e in spills)
+            sp_secs = sum(max(e.get("end", 0.0) - e.get("start", 0.0), 1e-9)
+                          for e in spills)
+            if sp_bytes > 0 and sp_secs > 0:
+                updates["spill_bandwidth"] = sp_bytes / sp_secs
+
         return dataclasses.replace(base, **updates)
 
 
@@ -385,6 +415,16 @@ class SimReport:
     #: measured wall-clock makespan of the replayed trace (replay mode
     #: only) — compare against ``makespan`` via :attr:`divergence`.
     measured_makespan: float | None = None
+    #: bin index -> high-water resident bytes (pull spans + kernel
+    #: activation bytes charged at dispatch).  Pure integer bookkeeping:
+    #: tracked whether or not budgets are set, and never exceeds a bin's
+    #: ``memory_bytes`` when one is — overflow is converted into forced
+    #: spill events instead.
+    peak_bytes: dict[int, int] = field(repr=False, default_factory=dict)
+    #: forced evictions the simulated run needed to stay under budget
+    n_spills: int = 0
+    #: seconds charged to those evictions (D2H + refill round trips)
+    spill_seconds: float = 0.0
 
     @property
     def divergence(self) -> float | None:
@@ -557,6 +597,18 @@ def simulate(
     workers = [0.0] * max(1, host_workers)
     heapq.heapify(workers)
     busy = {i: 0.0 for i in range(len(bins))}
+    # memory accounting: resident bytes per bin (pull spans + kernel
+    # activation bytes, charged at dispatch and held for the pass — the
+    # same footprint the policies pack).  Budgeted bins convert overflow
+    # into forced spill charges, so peak_bytes never exceeds any bin's
+    # memory_bytes; unbudgeted bins just record the high-water mark.
+    # Integer-only bookkeeping: with budgets unset no duration changes,
+    # so pre-existing baselines reproduce bit-for-bit.
+    budgets = [bin_memory_bytes(b) for b in bins]
+    resident = {i: 0 for i in range(len(bins))}
+    peak_bytes = {i: 0 for i in range(len(bins))}
+    n_spills = 0
+    spill_seconds = 0.0
     lane_busy = {i: {COPY_LANE: 0.0, COMPUTE_LANE: 0.0}
                  for i in range(len(bins))}
     host_busy = 0.0
@@ -567,9 +619,30 @@ def simulate(
     node_by_id = {n.id: n for n in graph.nodes}
 
     def dispatch(n: Node, ready_t: float) -> None:
-        nonlocal host_busy
+        nonlocal host_busy, n_spills, spill_seconds
         kind, b = res_of[n.id]
         dur = duration(n, b)
+        if kind != _HOST_LANE:
+            fp = node_footprint(n)
+            if fp > 0:
+                cap = budgets[b]
+                if cap is not None and resident[b] + fp > cap:
+                    # forced spill: evict enough of the coldest resident
+                    # bytes to fit; a node whose own footprint exceeds
+                    # the budget streams its excess through (charged as
+                    # spilled bytes, peak clamped at the budget)
+                    evict = min(resident[b] + fp - cap, resident[b])
+                    stream = max(fp - cap, 0)
+                    n_spills += 1
+                    if rp is None:  # replay durations embed spill time
+                        st = model.spill_time(evict + stream)
+                        spill_seconds += st
+                        dur += st
+                    resident[b] = min(resident[b] - evict + fp, cap)
+                else:
+                    resident[b] += fp
+                if resident[b] > peak_bytes[b]:
+                    peak_bytes[b] = resident[b]
         wfree = heapq.heappop(workers)
         if kind == _HOST_LANE:
             start = max(ready_t, wfree)
@@ -644,4 +717,7 @@ def simulate(
         finish_times=finish,
         schedule=schedule,
         measured_makespan=rp.measured_makespan if rp is not None else None,
+        peak_bytes=peak_bytes,
+        n_spills=n_spills,
+        spill_seconds=spill_seconds,
     )

@@ -11,6 +11,15 @@ is constructed with several device bins; KV capacity is governed by the
 :class:`~repro.serving.kv_cache.PagedKVArena` buddy pool — a request is
 admitted only when the arena can host its page run (otherwise it queues),
 the vLLM admission rule built on the paper's allocator.
+
+**Grow/preempt rule**: a page-run grow (``PagedKVArena.extend``) frees
+the old run before allocating the doubled one, so coalescing can satisfy
+it in a near-full arena.  When even that fails, the engine does not
+crash the tick: it preempts the *youngest* active request — releasing
+its pages and re-queueing it at the queue head with its generated tokens
+reset (greedy decoding recomputes them identically) — and retries the
+grow.  Admission reserves ``prompt + max_new_tokens`` up front, so grows
+only bind when requests were seated with smaller reservations.
 """
 from __future__ import annotations
 
@@ -26,6 +35,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core import Executor, Heteroflow
+from ..core.memory import OutOfMemory
 from ..models import transformer
 from .kv_cache import PagedKVArena
 
@@ -78,6 +88,7 @@ class ServingEngine:
         self._decode = jax.jit(
             lambda p, t, c: transformer.decode_step(cfg, p, t, c))
         self.ticks = 0
+        self.preemptions = 0
 
     @staticmethod
     def _kv_bytes_per_token(cfg: ModelConfig) -> int:
@@ -115,8 +126,14 @@ class ServingEngine:
         self.ticks += 1
         # 1. admission (arena-gated)
         with self._lock:
+            stalled = False
             for i in range(self.max_slots):
-                if self._slots[i] is None and self._queue:
+                if stalled:
+                    break
+                # re-try slot i after an oversize rejection: the next
+                # queued request may well fit (the old `continue` left
+                # the slot empty for the whole tick)
+                while self._slots[i] is None and self._queue:
                     nxt = self._queue[0]
                     need = len(nxt.prompt) + nxt.max_new_tokens
                     if need > self.max_seq:
@@ -125,7 +142,8 @@ class ServingEngine:
                         self.completed.append(nxt)
                         continue
                     if not self.arena.can_admit(need):
-                        break                    # wait for pages to free
+                        stalled = True           # wait for pages to free
+                        break
                     req = self._queue.popleft()
                     self.arena.admit(req.id, len(req.prompt),
                                      reserve_tokens=req.max_new_tokens)
@@ -142,6 +160,8 @@ class ServingEngine:
         # 2. decode step for all active slots
         active = [(i, r) for i, r in enumerate(self._slots) if r is not None]
         for i, req in active:
+            if self._slots[i] is not req:
+                continue                          # preempted mid-tick
             if len(req.generated) >= req.max_new_tokens:
                 self._retire(i)
                 continue
@@ -149,17 +169,50 @@ class ServingEngine:
             logits, self._caches[i] = self._decode(
                 self.params, tok, self._caches[i])
             req.generated.append(int(jnp.argmax(logits[0])))
-            self.arena.extend(req.id)
+            if not self._grow(req):
+                continue                          # req went back to queue
             if len(req.generated) >= req.max_new_tokens:
                 self._retire(i)
         return self._has_work()
 
+    def _grow(self, req: Request) -> bool:
+        """Extend ``req``'s page run, preempting the youngest active
+        request on grow-OOM (module docstring: grow/preempt rule).
+        Returns False when ``req`` itself was the preemption victim."""
+        while True:
+            try:
+                self.arena.extend(req.id)
+                return True
+            except OutOfMemory:
+                victim = self._preempt_youngest()
+                if victim is None or victim is req:
+                    return False
+
+    def _preempt_youngest(self) -> Request | None:
+        """Kick the youngest (highest id) active request back to the
+        queue head: release its pages and reset its generated tokens —
+        greedy decoding recomputes them identically on re-admission."""
+        with self._lock:
+            seated = [(r.id, i) for i, r in enumerate(self._slots)
+                      if r is not None]
+            if not seated:
+                return None
+            _, slot = max(seated)
+            victim = self._slots[slot]
+            self.arena.release(victim.id)
+            victim.generated.clear()
+            self._slots[slot] = None
+            self._queue.appendleft(victim)
+            self.preemptions += 1
+            return victim
+
     def _retire(self, slot: int) -> None:
-        req = self._slots[slot]
-        req.done = True
-        self.arena.release(req.id)
-        self.completed.append(req)
-        self._slots[slot] = None
+        with self._lock:
+            req = self._slots[slot]
+            req.done = True
+            self.arena.release(req.id)
+            self.completed.append(req)
+            self._slots[slot] = None
 
     # -- stats --------------------------------------------------------------
     def stats(self) -> dict[str, Any]:
@@ -171,4 +224,5 @@ class ServingEngine:
             "kv_utilization": self.arena.utilization,
             "kv_fragmentation": self.arena.fragmentation(),
             "page_grows": self.arena.grows,
+            "preemptions": self.preemptions,
         }

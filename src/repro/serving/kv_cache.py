@@ -14,7 +14,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from ..core.memory import BuddyAllocator
+from ..core.memory import BuddyAllocator, OutOfMemory
 
 
 def _pow2_ceil(x: int) -> int:
@@ -65,13 +65,34 @@ class PagedKVArena:
         return pt
 
     def extend(self, request_id: int, new_tokens: int = 1) -> PageTable:
-        """Account token growth; doubles the page run when it overflows."""
+        """Account token growth; doubles the page run when it overflows.
+
+        The grow is **free-then-allocate**: the arena is accounting-only
+        (physical KV storage is the engine's stacked cache — there is no
+        data in the pages to preserve), so the old run is released first
+        and its pages coalesce with their buddies before the doubled run
+        is requested.  A near-full arena that can only fit the new run
+        *after* coalescing therefore succeeds instead of raising a
+        spurious :class:`OutOfMemory`.  When even the coalesced arena
+        cannot host the doubled run, the original run is re-taken (its
+        pages are still free — the re-allocation cannot fail) and
+        ``OutOfMemory`` propagates with the table intact, so the engine
+        can preempt a request rather than crash mid-tick.
+        """
         pt = self.tables[request_id]
         pt.used_tokens += new_tokens
         if pt.used_tokens > pt.n_pages * self.page_tokens:
             new_n = _pow2_ceil(self.pages_for(pt.used_tokens))
-            new_off = self._buddy.allocate(new_n)
             self._buddy.free(pt.offset)
+            try:
+                new_off = self._buddy.allocate(new_n)
+            except OutOfMemory:
+                # roll back: a run of the old size still fits (we just
+                # freed one), so the accounting stays consistent and the
+                # caller decides who to preempt
+                pt.offset = self._buddy.allocate(pt.n_pages)
+                pt.used_tokens -= new_tokens
+                raise
             pt.offset, pt.n_pages = new_off, new_n
             self.grows += 1
         return pt

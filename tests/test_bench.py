@@ -93,3 +93,51 @@ def test_sched_bench_write_baseline_roundtrip(tmp_path):
     assert all(set(p) == {"heft"} for p in written["makespan_s"].values())
     assert sched_bench.main(["--random-seeds", "2",
                              "--check-baseline", str(path)]) == 0
+
+
+def test_budget_bins_wraps_plain_and_sets_execution_bins():
+    from repro.sched import DeviceBin, bin_memory_bytes
+
+    bins = sched_bench.budget_bins(["d0", DeviceBin("d1")], 1024)
+    assert [bin_memory_bytes(b) for b in bins] == [1024, 1024]
+    assert all(getattr(b, "kind", None) == "device" for b in bins)
+
+
+def test_memory_capped_gate_row_passes(capsys):
+    rc = sched_bench.main(["--memory-bytes", "4096",
+                           "--shapes", "fanout,diamond",
+                           "--policies", "heft,random",
+                           "--random-seeds", "2"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "check,memory_capped_not_worse_than_2x_uncapped,PASS" in out
+    # knob set: the bit-identical row must NOT run (budgets change costs)
+    assert "budgets_off_bit_identical" not in out
+
+
+def test_budgets_off_bit_identical_row(capsys, tmp_path):
+    """With the knob off at the default config, the gated policy's
+    makespans must equal the checked-in baseline EXACTLY (the ==-based
+    row, stricter than the rtol baseline gate)."""
+    out_json = tmp_path / "bench.json"
+    rc = sched_bench.main(["--shapes", "chain", "--policies", "heft",
+                           "--json", str(out_json)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "check,budgets_off_bit_identical,PASS" in out
+    assert json.loads(out_json.read_text())["memory_bytes"] == 0
+
+
+def test_budgets_off_row_warns_on_config_mismatch(capsys):
+    rc = sched_bench.main(["--host-workers", "2", "--shapes", "chain",
+                           "--policies", "heft"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "check,budgets_off_bit_identical,WARN" in out
+
+
+def test_check_baseline_flags_memory_bytes_mismatch():
+    base = _payload({"chain": 1.0})
+    cur = dict(_payload({"chain": 1.0}), memory_bytes=4096)
+    assert any("memory_bytes" in f
+               for f in sched_bench.check_baseline(cur, base))

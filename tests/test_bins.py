@@ -289,7 +289,7 @@ def test_executor_runs_mixed_bin_kinds_end_to_end():
 def test_trace_v3_descriptors_roundtrip(tmp_path):
     prof, bins, G, _, _ = _run_mixed_bins()
     trace = prof.trace()
-    assert trace["version"] == 4
+    assert trace["version"] == 5
     descs = trace["meta"]["bin_descriptors"]
     assert [d["kind"] for d in descs] == ["device", "host", "mesh"]
     assert descs[2]["axis_shape"] == {"data": 1, "model": 1}

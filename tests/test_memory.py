@@ -92,3 +92,99 @@ def test_kv_arena_growth_doubles_run():
     assert arena.grows >= 1
     arena.release(0)
     assert arena.pages_in_use == 0
+
+
+def test_kv_grow_succeeds_in_near_full_arena_via_free_then_allocate():
+    """The extend path frees the old run BEFORE allocating the doubled
+    one, so coalescing can satisfy a grow the old allocate-then-free
+    order spuriously OOMed on (ISSUE: accounting-only arena)."""
+    arena = PagedKVArena(n_pages=4, page_tokens=16, kv_bytes_per_token=1)
+    arena.admit(0, prompt_tokens=16)            # 1 page  @ some offset
+    arena.admit(1, prompt_tokens=32)            # 2 pages
+    arena.release(1)
+    # 17 extends push used_tokens to 33: the run grows 1 -> 2 -> 4
+    # pages.  The final grow-to-4 holds 2 pages with only 2 free — it
+    # can ONLY succeed because extend frees the old run first and lets
+    # it coalesce into the full arena
+    for _ in range(17):
+        arena.extend(0)
+    assert arena.tables[0].n_pages == 4
+    assert arena.pages_in_use == 4
+
+
+def test_kv_grow_oom_rolls_back_and_raises():
+    """When even the coalesced arena cannot host the doubled run, the
+    original run is re-taken and the accounting is untouched."""
+    arena = PagedKVArena(n_pages=4, page_tokens=16, kv_bytes_per_token=1)
+    arena.admit(0, prompt_tokens=64)            # 4 pages: arena full
+    pt = arena.tables[0]
+    before = (pt.n_pages, pt.used_tokens, arena.pages_in_use)
+    with pytest.raises(OutOfMemory):
+        arena.extend(0)                         # would need 8 pages
+    assert (pt.n_pages, pt.used_tokens, arena.pages_in_use) == before
+    arena._buddy.check_invariants()
+    arena.release(0)
+    assert arena.pages_in_use == 0
+
+
+def test_buddy_peak_in_use_high_water():
+    b = BuddyAllocator(1024, 64)
+    offs = [b.allocate(256) for _ in range(3)]
+    assert b.peak_in_use == 768
+    for o in offs:
+        b.free(o)
+    assert b.bytes_in_use == 0
+    assert b.peak_in_use == 768                 # sticky high-water
+    b.allocate(64)
+    assert b.peak_in_use == 768                 # below the mark: unchanged
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 2048)),
+                min_size=1, max_size=100))
+def test_arena_under_pressure_invariants(ops):
+    """DeviceArena under random pressure: invariants hold, peak_bytes is
+    a monotone high-water never above capacity, and fragmentation /
+    utilization accounting stays in range."""
+    from repro.core.memory import DeviceArena
+
+    a = DeviceArena("dev", 1 << 14, min_block=256)
+    live, peak_seen = [], 0
+    for is_free, size in ops:
+        if is_free and live:
+            a.free(live.pop(size % len(live)))
+        else:
+            try:
+                live.append(a.allocate(size))
+            except OutOfMemory:
+                pass
+        a.allocator.check_invariants()
+        assert a.bytes_in_use <= a.peak_bytes <= a.capacity
+        assert a.peak_bytes >= peak_seen        # monotone
+        peak_seen = a.peak_bytes
+        assert 0.0 <= a.allocator.fragmentation() <= 1.0
+    for o in live:
+        a.free(o)
+    assert a.bytes_in_use == 0
+    assert a.peak_bytes == peak_seen
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 8), min_size=2, max_size=24))
+def test_no_spurious_oom_when_free_then_allocate_fits(sizes):
+    """After freeing a block of n min_blocks, an n-block allocate can
+    never fail — the guarantee the KV grow rollback leans on."""
+    b = BuddyAllocator(1 << 10, 64)             # 16 min blocks
+    live = []
+    for s in sizes:
+        try:
+            live.append((b.allocate(s * 64), s))
+        except OutOfMemory:
+            break
+    while live:
+        off, s = live.pop()
+        b.free(off)
+        off2 = b.allocate(s * 64)               # must not raise
+        b.free(off2)
+        b.check_invariants()
+    assert b.bytes_in_use == 0

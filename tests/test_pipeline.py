@@ -345,7 +345,7 @@ def _profiled_pipeline_run(workers=1):
 def test_trace_v4_records_stages_and_link_descriptors(tmp_path):
     G, prof, pool, ex = _profiled_pipeline_run()
     trace = prof.trace()
-    assert trace["version"] == 4
+    assert trace["version"] == 5
     descs = trace["meta"]["bin_descriptors"]
     assert [d["kind"] for d in descs] == ["stage", "stage"]
     for s, d in enumerate(descs):

@@ -78,3 +78,67 @@ def test_engine_matches_raw_decode(rig):
             cfg, params, jnp.asarray([want[-1]], jnp.int32), caches)
         want.append(int(jnp.argmax(logits[0])))
     assert got == want
+
+
+def test_oversize_reject_retries_slot_in_same_tick(rig):
+    """Rejecting an oversize request must not waste the slot for the
+    whole tick: the next queued request is seated immediately."""
+    cfg, params = rig
+    eng = ServingEngine(cfg, params, max_slots=1, max_seq=16)
+    eng.submit(np.zeros(30, np.int32), max_new_tokens=4)   # 34 > 16
+    fit_id = eng.submit(np.arange(4) % cfg.vocab_size, max_new_tokens=8)
+    eng._tick()
+    assert eng._slots[0] is not None and eng._slots[0].id == fit_id
+    rejected = eng.completed[0]
+    assert rejected.done and rejected.generated == []
+    done = eng.run()
+    assert sorted(r.id for r in done) == [0, 1]
+
+
+def test_grow_oom_preempts_youngest_and_requeues(rig):
+    """Grow-OOM preempts the youngest active request: pages released,
+    generated tokens reset (greedy re-decode is identical), request
+    back at the queue head — and the grow then succeeds."""
+    from repro.serving.engine import Request
+
+    cfg, params = rig
+    # 2 slots x 16-token pages over a 2-page arena: seat both requests
+    # with NO reservation so the first grow collides with a full arena
+    eng = ServingEngine(cfg, params, max_slots=2, max_seq=16,
+                        page_tokens=16)
+    r0 = Request(0, np.zeros(16, np.int32), 4)
+    r1 = Request(1, np.zeros(16, np.int32), 4)
+    r1.generated = [7, 8]
+    eng._slots[0], eng._slots[1] = r0, r1
+    eng.arena.admit(0, 16, reserve_tokens=0)
+    eng.arena.admit(1, 16, reserve_tokens=0)
+    assert not eng.arena.can_admit(1)                      # full
+
+    assert eng._grow(r0) is True                           # preempts r1
+    assert eng.preemptions == 1
+    assert eng.stats()["preemptions"] == 1
+    assert eng._slots[1] is None
+    assert eng._queue[0] is r1 and r1.generated == []
+    assert 1 not in eng.arena.tables                       # pages freed
+    assert eng.arena.tables[0].n_pages == 2                # grow landed
+
+
+def test_grow_oom_with_no_other_victim_returns_false(rig):
+    """When the requester is itself the youngest (or only) active
+    request, _grow gives up: the request goes back to the queue and the
+    tick continues instead of crashing."""
+    from repro.serving.engine import Request
+
+    cfg, params = rig
+    eng = ServingEngine(cfg, params, max_slots=1, max_seq=16,
+                        page_tokens=16)
+    # fill the 1-page arena with a foreign table so the grow cannot fit
+    eng.arena.admit(99, 16, reserve_tokens=0)
+    r0 = Request(0, np.zeros(16, np.int32), 4)
+    eng._slots[0] = r0
+    eng.arena.tables[0] = eng.arena.tables.pop(99)         # alias pages
+    eng.arena.tables[0].request_id = 0
+
+    assert eng._grow(r0) is False
+    assert eng._slots[0] is None and eng._queue[0] is r0
+    assert eng.preemptions == 1                            # self-preempt
