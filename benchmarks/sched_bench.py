@@ -38,6 +38,17 @@ pathological) when the knob is set, and ``budgets_off_bit_identical``
 (the gated policy's makespans equal the checked-in baseline EXACTLY,
 not just within tolerance) when it is off at the default config.
 
+``--arrival poisson:RATE`` appends the live-traffic serving study:
+a Poisson request trace (``--requests``) is replayed through the
+event-driven ``Scheduler.update()`` loop — one ``SchedulerUpdate`` per
+arriving request, no global graph — and per-request TTFT p50/p99 is
+reported per policy next to the static-batching strawman
+(``--serving-batch`` requests per batch, each batch admitted only when
+the previous one fully completes).  The
+``online_p99_ttft_not_worse_than_static`` gate row requires the gated
+policy's online p99 TTFT to beat or tie static batching.  Without the
+flag nothing changes — the baseline rows stay bit-identical.
+
 ``--measure`` additionally executes every cell on the real executor
 (one JAX-device bin per simulated bin), fits a ``CostModel`` from the
 recorded trace, and appends measured wall-clock + the fitted
@@ -78,7 +89,9 @@ from benchmarks.workloads import (
     build_fanout,
     build_pipeline,
     build_random_dag,
+    build_serving_trace,
     build_sharded_stack,
+    serving_specs,
 )
 from repro.configs import DEFAULT_SCHED
 from repro.core.streams import DEFAULT_LANE_DEPTH
@@ -89,8 +102,12 @@ from repro.sched import (
     MeshBin,
     RandomPolicy,
     get_scheduler,
+    online_report,
+    percentile,
+    poisson,
     simulate,
     stage_bins,
+    static_batching_latency,
 )
 
 SHAPES = {
@@ -251,6 +268,83 @@ def measure(policy_name: str, shape: str, n_bins: int, workers: int,
     return prof.makespan(), pred
 
 
+def parse_arrival(spec: str):
+    """Parse ``--arrival``: ``poisson:RATE`` (requests/second) → a
+    deterministic :func:`~repro.sched.poisson` arrival process."""
+    if spec.startswith("poisson:"):
+        try:
+            rate = float(spec.split(":", 1)[1])
+        except ValueError:
+            rate = 0.0
+        if rate <= 0:
+            raise ValueError(f"--arrival rate must be > 0, got {spec!r}")
+        return poisson(rate, seed=1)
+    raise ValueError(f"--arrival must be poisson:RATE, got {spec!r}")
+
+
+def serving_study(args, bins_spec: str, policies: list[str],
+                  model: CostModel) -> tuple[dict, bool]:
+    """Live-traffic serving study (``--arrival``): replay a Poisson
+    request trace through the event-driven :meth:`Scheduler.update`
+    loop (one :class:`SchedulerUpdate` per arriving request, no global
+    graph) and score per-request TTFT p50/p99 + completion p99, next to
+    the static-batching strawman (fixed batches admitted only after the
+    previous batch fully completes).  The gate row requires the gated
+    policy's online p99 TTFT to beat — or tie — static batching.
+
+    Returns ``(payload_section, gate_ok)``.
+    """
+    arrival = parse_arrival(args.arrival)
+    specs = serving_specs(args.requests)
+    times = arrival.times(len(specs))
+
+    def fresh_bins() -> list:
+        b = parse_bins(bins_spec)
+        return budget_bins(b, args.memory_bytes) if args.memory_bytes else b
+
+    def stats(rows: list[dict[str, float]]) -> tuple[float, float, float]:
+        ttft = [r["ttft"] for r in rows]
+        comp = [r["complete"] for r in rows]
+        return (percentile(ttft, 50), percentile(ttft, 99),
+                percentile(comp, 99))
+
+    out = {"arrival": args.arrival, "requests": args.requests,
+           "batch_size": args.serving_batch, "online": {},
+           "static_batching": {}}
+    print("serving,mode,policy,ttft_p50_ms,ttft_p99_ms,complete_p99_ms")
+    # the gate needs the gated policy even when --policies excludes it
+    online_pols = list(dict.fromkeys(list(policies) + [GATED_POLICY]))
+    for pol in online_pols:
+        kwargs = {"cost_model": model} if pol == "heft" else {}
+        if pol == "random":
+            kwargs["seed"] = 0
+        sched = get_scheduler(pol, **kwargs)
+        rep = online_report(build_serving_trace(specs), fresh_bins(),
+                            sched, times, cost_model=model,
+                            host_workers=args.host_workers)
+        p50, p99, c99 = stats(rep.request_latency)
+        out["online"][pol] = {"ttft_p50_s": p50, "ttft_p99_s": p99,
+                              "complete_p99_s": c99}
+        print(f"serving,online,{pol},{p50 * 1e3:.4f},{p99 * 1e3:.4f},"
+              f"{c99 * 1e3:.4f}", flush=True)
+    rows = static_batching_latency(
+        specs, times, build_serving_trace, fresh_bins, GATED_POLICY,
+        batch_size=args.serving_batch, cost_model=model,
+        host_workers=args.host_workers)
+    s50, s99, sc99 = stats(rows)
+    out["static_batching"][GATED_POLICY] = {
+        "ttft_p50_s": s50, "ttft_p99_s": s99, "complete_p99_s": sc99}
+    print(f"serving,static_batching,{GATED_POLICY},{s50 * 1e3:.4f},"
+          f"{s99 * 1e3:.4f},{sc99 * 1e3:.4f}")
+    online_p99 = out["online"][GATED_POLICY]["ttft_p99_s"]
+    good = online_p99 <= s99 * (1 + 1e-9)
+    print(f"check,online_p99_ttft_not_worse_than_static,"
+          f"{'PASS' if good else 'FAIL'},"
+          f"online_p99={online_p99 * 1e3:.4f}ms,"
+          f"static_p99={s99 * 1e3:.4f}ms")
+    return out, good
+
+
 def results_payload(args, results: dict[tuple[str, str], float],
                     utils: dict[tuple[str, str], float]) -> dict:
     """Machine-readable sweep outcome (the --json artifact / baseline)."""
@@ -354,6 +448,18 @@ def main(argv: list[str] | None = None) -> int:
                         "group footprints against it and the simulator "
                         "charges forced spills for overflow; 0 (default) "
                         "= unlimited, baseline-identical")
+    p.add_argument("--arrival", metavar="SPEC",
+                   help="serving study under live traffic: poisson:RATE "
+                        "(requests/s) replays a request trace through the "
+                        "event-driven Scheduler.update() loop and gates "
+                        "the gated policy's p99 TTFT against static "
+                        "batching; off by default (baseline rows are "
+                        "untouched either way)")
+    p.add_argument("--requests", type=int, default=80,
+                   help="request count for the --arrival serving study")
+    p.add_argument("--serving-batch", type=int, default=8,
+                   help="batch size of the static-batching strawman in "
+                        "the --arrival serving study")
     p.add_argument("--measure", action="store_true",
                    help="also run every cell on the real executor, fit "
                         "a CostModel from its trace, and report measured "
@@ -436,11 +542,27 @@ def main(argv: list[str] | None = None) -> int:
                 row += (f",{wall * 1e3:.4f},{pred * 1e3:.4f},{div:+.3f}")
             print(row, flush=True)
 
+    serving_payload, serving_ok = None, True
+    if args.arrival:
+        if args.requests < 1:
+            p.error(f"--requests must be >= 1, got {args.requests}")
+        if args.serving_batch < 1:
+            p.error(f"--serving-batch must be >= 1, got {args.serving_batch}")
+        try:
+            serving_payload, serving_ok = serving_study(
+                args, bins_spec, policies, model)
+        except ValueError as e:
+            p.error(str(e))
+
     # baseline payloads keep the legacy integer bin count; mesh pools
     # record their spec string (config mismatch vs an int baseline is
     # exactly right — the sweeps are not comparable)
     args.bins = int(args.bins) if args.bins.isdigit() else args.bins
     payload = results_payload(args, results, utils)
+    if serving_payload is not None:
+        # additive section: baseline comparisons only read the sweep
+        # keys, so --arrival runs stay comparable with no-arrival ones
+        payload["serving"] = serving_payload
     if args.json:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
@@ -461,7 +583,7 @@ def main(argv: list[str] | None = None) -> int:
         print(f"baseline,{args.write_baseline}")
         return 0
 
-    ok = True
+    ok = serving_ok
     for shape in ("fanout", "diamond"):
         if ("heft" in policies and "random" in policies and shape in shapes):
             h, r = results[(shape, "heft")], results[(shape, "random")]

@@ -279,6 +279,42 @@ def build_pipeline(n_stages: int = 4, n_microbatches: int = 8,
                                 require_stage_bins=require_stage_bins)
 
 
+def serving_specs(n_requests: int = 64, seed: int = 0):
+    """Synthetic request mix for the serving-trace workload: one
+    ``(prompt_tokens, new_tokens)`` pair per request, drawn from a
+    seeded rng so latency studies reproduce bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    return [(int(rng.integers(64, 512)), int(rng.integers(16, 128)))
+            for _ in range(n_requests)]
+
+
+def build_serving_trace(specs, *, nbytes_per_token: int = 16384,
+                        prefill_cost_per_token: float = 2.0,
+                        decode_cost_per_token: float = 6.0):
+    """High-volume serving trace: one independent prefill→decode chain
+    per request (the shape ``sched_bench --arrival poisson:RATE``
+    replays through the event-driven scheduler).
+
+    Request ``r`` contributes ``pull_prompt… → prefill{r} → decode{r}``
+    with its own pulls, so the affinity phase yields two groups per
+    request: a *prefill* group whose pull spans the prompt's KV-sized
+    bytes, and a *decode* group depending on it.  Placing the decode on
+    a different bin than its prefill charges the KV transfer
+    (``CostModel.transfer_time`` over the prompt span) — the simulator
+    form of the engine's KV-locality rule.  Each request is its own
+    weakly-connected component, in spec order, so
+    ``simulate(..., arrivals=...)`` maps arrival times 1:1 to requests.
+    """
+    G = Heteroflow("serving_trace")
+    for r, (p_tok, n_new) in enumerate(specs):
+        prefill = _stage_kernel(G, f"prefill{r}",
+                                prefill_cost_per_token * p_tok,
+                                p_tok * nbytes_per_token)
+        _stage_kernel(G, f"decode{r}", decode_cost_per_token * n_new,
+                      1024, prefill)
+    return G
+
+
 def build_random_dag(n_kernels: int = 64, seed: int = 0, fan_in: int = 3,
                      nbytes: int = 512, with_pushes: bool = True):
     """Seeded layered random DAG of ``n_kernels`` kernels.

@@ -212,6 +212,15 @@ class SchedConfig:
     ``sched.TaskProfiler`` trace there for offline ``CostModel.fit``
     calibration.
 
+    Since the event-driven redesign (docs/scheduling.md "Online
+    scheduling") both dynamic knobs route through the long-lived
+    :meth:`Scheduler.update` loop: the executor seeds a
+    ``SchedulerState`` with ``measured_load`` (and ``migrate_top_k``)
+    and sends an empty ``SchedulerUpdate`` — a reschedule *is* an
+    update with measured-load state and no new work.  The old
+    ``Scheduler.reschedule()`` entry point is a DeprecationWarning shim
+    over the same path.
+
     Non-ideal sharded scaling (``CostModel.collective_overhead``):
     ``collective_alpha`` (seconds per ring hop) and ``collective_beta``
     (bytes/s per link) charge mesh-wide compute an α·(n−1) +

@@ -821,9 +821,21 @@ class Executor:
                     for i, label in enumerate(self.device_labels)}
         if self.arenas:
             old_device = {n.id: n.device for n in topo.graph.nodes}
-        self.scheduler.reschedule(topo.graph, self.devices, self._cost_fn,
-                                  measured_load=measured,
-                                  migrate_top_k=self._migrate_top_k)
+        # a reschedule is an update with measured-load state and no new
+        # tasks (sched.base.Scheduler.update): migrate when configured,
+        # full repack otherwise, then write the placement back
+        from repro.sched.base import (SchedulerState, SchedulerUpdate,
+                                      apply_assignment, build_groups)
+        groups = build_groups(topo.graph, self._cost_fn)
+        sched_state = SchedulerState(self.devices,
+                                     migrate_top_k=self._migrate_top_k)
+        for g in groups:
+            sched_state.add_group(g)
+        sched_state.measured_load = measured
+        self.scheduler.update(sched_state, SchedulerUpdate(),
+                              graph=topo.graph)
+        apply_assignment(topo.graph, groups, self.devices,
+                         sched_state.assignment)
         if self.arenas:
             # a moved pull's arena block belongs to the *old* device; free
             # it so occupancy stays honest and the next pull on the new

@@ -41,9 +41,25 @@ traces serialize bin descriptors so mesh/stage runs replay faithfully
 pipeline run).  Non-ideal sharded scaling:
 ``CostModel(collective_alpha=..., collective_beta=...)`` charges an
 α-β ring-collective overhead on mesh-wide compute (default off).
+
+Online scheduling (PR 7): schedulers are long-lived.  Feed
+:class:`SchedulerUpdate` events (new tasks / finishes / bin churn)
+through :meth:`Scheduler.update` against a persistent
+:class:`SchedulerState`; only new or displaced groups are (re)placed —
+deltas, never full repacks.  ``schedule()`` is now a thin one-update
+wrapper, so one-shot callers are unchanged.  ``simulate(...,
+arrivals=poisson(rate))`` releases each request's sources at its
+arrival time and reports per-request TTFT/completion
+(``SimReport.request_latency``); ``sched.online`` replays arrival
+traces through the update loop (``online_report``) and scores them
+against the ``static_batching_latency`` strawman.  The old
+``reschedule()`` / ``migrate_top_k=`` entry points are deprecated
+shims over ``update()`` (see docs/scheduling.md "Online scheduling").
 """
 from .base import (
     Scheduler,
+    SchedulerState,
+    SchedulerUpdate,
     TaskGroup,
     apply_assignment,
     available_policies,
@@ -68,6 +84,12 @@ from .bins import (
     stage_bins,
     stage_link,
 )
+from .online import (
+    online_placement,
+    online_report,
+    percentile,
+    static_batching_latency,
+)
 from .policies import BalancedBins, Heft, RandomPolicy, RoundRobin
 from .profile import (
     TaskProfiler,
@@ -77,10 +99,18 @@ from .profile import (
     node_bytes,
     producer_bytes,
 )
-from .simulator import CostModel, SimReport, simulate
+from .simulator import (
+    ArrivalProcess,
+    CostModel,
+    SimReport,
+    poisson,
+    simulate,
+    weak_components,
+)
 
 __all__ = [
-    "Scheduler", "TaskGroup", "build_groups", "apply_assignment",
+    "Scheduler", "SchedulerState", "SchedulerUpdate", "TaskGroup",
+    "build_groups", "apply_assignment",
     "register", "get_scheduler", "available_policies", "group_candidates",
     "node_footprint",
     "ExecutionBin", "DeviceBin", "HostBin", "MeshBin", "StageBin",
@@ -89,6 +119,9 @@ __all__ = [
     "bins_from_trace",
     "BalancedBins", "Heft", "RoundRobin", "RandomPolicy",
     "CostModel", "SimReport", "simulate",
+    "ArrivalProcess", "poisson", "weak_components",
+    "online_placement", "online_report", "percentile",
+    "static_batching_latency",
     "TaskProfiler", "TaskRecord", "load_trace", "node_bytes",
     "producer_bytes", "cross_bin_bytes",
 ]

@@ -22,6 +22,7 @@ the paper's invariants hold for all of them:
 from __future__ import annotations
 
 import abc
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Hashable, Mapping, Sequence
 
@@ -29,11 +30,13 @@ from repro.core.graph import Heteroflow, Node, TaskType
 from repro.core.placement import UnionFind, _nbytes, estimate_node_cost
 from repro.core.streams import bin_labels
 
-from .bins import eligible_bins
+from .bins import bin_compute_scale, eligible_bins
 
 __all__ = [
     "TaskGroup",
     "Scheduler",
+    "SchedulerUpdate",
+    "SchedulerState",
     "build_groups",
     "apply_assignment",
     "bin_index",
@@ -158,6 +161,176 @@ def build_groups(graph: Heteroflow, cost_fn: CostFn = estimate_node_cost,
     return list(groups.values())
 
 
+@dataclass(frozen=True)
+class SchedulerUpdate:
+    """One batch of scheduler events — the estee ``Update`` signature.
+
+    Online callers (the serving engine, ``sched.online``) hand the
+    scheduler the *change* since the last call instead of the whole
+    world: request task-groups that just arrived (``new_tasks``), groups
+    whose inputs became available (``new_ready_tasks``, advisory),
+    groups that completed (``new_finished_tasks`` — releases their
+    *active* load accounting), and bins that joined or left the pool
+    (``new_bins`` / ``retired_bins`` — estee's ``new_workers``, both
+    directions).  An empty update with
+    :attr:`SchedulerState.measured_load` set is a rebalance request —
+    the event-loop spelling of the deprecated :meth:`Scheduler.reschedule`.
+    """
+
+    new_tasks: tuple = ()
+    new_ready_tasks: tuple = ()
+    new_finished_tasks: tuple = ()
+    new_bins: tuple = ()
+    retired_bins: tuple = ()
+
+    def __bool__(self) -> bool:
+        return bool(self.new_tasks or self.new_ready_tasks
+                    or self.new_finished_tasks or self.new_bins
+                    or self.retired_bins)
+
+
+class SchedulerState:
+    """Long-lived placement state threaded through :meth:`Scheduler.update`.
+
+    Where ``assign()`` is a pure function of one group list, online
+    scheduling needs memory: which groups exist, where they sit, how
+    much cumulative cost/bytes each bin has absorbed, which pipeline
+    stages landed where, and any policy-private bookkeeping (HEFT lane
+    clocks, round-robin cursors) in :attr:`scratch`.  Bin slots are
+    **stable**: retiring a bin tombstones its index (removed from
+    :attr:`live`) instead of renumbering, so assignments recorded in
+    earlier events stay valid forever.
+
+    Placement load (:attr:`load`) is *cumulative over placed work* and
+    is deliberately NOT decremented on finish — that makes any chunking
+    of the same arrivals into ``update()`` events land exactly where the
+    one-shot ``schedule()`` would (the interleaving-parity property the
+    test suite checks).  :attr:`active_load` tracks the in-flight subset
+    for metrics and rebalance decisions.
+    """
+
+    def __init__(self, bins: Sequence[Any], *,
+                 initial_load: Mapping[Any, float] | None = None,
+                 migrate_top_k: int = 0):
+        if not bins:
+            raise ValueError("no device bins to place onto")
+        self.bins: list[Any] = list(bins)
+        self.live: set[int] = set(range(len(self.bins)))
+        self.initial_load = initial_load
+        self.load: dict[int, float] = {
+            i: bin_load(initial_load, self.bins, i)
+            for i in range(len(self.bins))}
+        self.active_load: dict[int, float] = {
+            i: 0.0 for i in range(len(self.bins))}
+        self.packed: dict[int, int] = {i: 0 for i in range(len(self.bins))}
+        self.groups: dict[Hashable, TaskGroup] = {}
+        self.assignment: dict[Hashable, int] = {}
+        self.finished: set[Hashable] = set()
+        self.ready: set[Hashable] = set()
+        self.placed_stage: dict[int, int] = {}
+        #: measured busy-seconds per bin since the last (re)placement —
+        #: set it and send an empty update to request a rebalance.
+        self.measured_load: Mapping[Any, float] | None = None
+        self.migrate_top_k = migrate_top_k
+        #: policy-private persistent state (HEFT lane clocks, cursors).
+        self.scratch: dict[str, Any] = {}
+        self._placed_any = False
+
+    # -- group / bin bookkeeping --------------------------------------
+    def add_group(self, g: TaskGroup) -> None:
+        self.groups[g.root] = g
+
+    def add_bin(self, b: Any) -> int:
+        """Append a bin slot and return its (stable) index."""
+        i = len(self.bins)
+        self.bins.append(b)
+        self.live.add(i)
+        self.load[i] = 0.0
+        self.active_load[i] = 0.0
+        self.packed[i] = 0
+        return i
+
+    def retire_bin(self, b: Any) -> list[TaskGroup]:
+        """Tombstone a bin slot; return its displaced (unfinished)
+        groups in arrival order so the caller can re-place them."""
+        idx = b if isinstance(b, int) else bin_index(self.bins, b)
+        if idx is None or idx not in self.live:
+            raise ValueError(f"cannot retire unknown/already-retired bin {b!r}")
+        self.live.discard(idx)
+        if not self.live:
+            raise ValueError("retiring the last live bin")
+        displaced = [g for r, g in self.groups.items()
+                     if self.assignment.get(r) == idx
+                     and r not in self.finished]
+        for g in displaced:
+            del self.assignment[g.root]
+        return displaced
+
+    def mark_finished(self, g: "TaskGroup | Hashable") -> None:
+        root = g.root if isinstance(g, TaskGroup) else g
+        if root in self.finished:
+            return
+        self.finished.add(root)
+        grp = self.groups.get(root)
+        i = self.assignment.get(root)
+        if grp is not None and i is not None:
+            scale = _group_scale(grp, self.bins[i])
+            self.active_load[i] = max(
+                0.0, self.active_load[i] - grp.cost / scale)
+
+    def mark_ready(self, g: "TaskGroup | Hashable") -> None:
+        self.ready.add(g.root if isinstance(g, TaskGroup) else g)
+
+    # -- placement recording ------------------------------------------
+    def record(self, g: TaskGroup, idx: int) -> None:
+        """Commit ``g -> bin idx``: assignment + load/bytes/stage books."""
+        self.assignment[g.root] = idx
+        scale = _group_scale(g, self.bins[idx])
+        self.load[idx] += g.cost / scale
+        if g.root not in self.finished:
+            self.active_load[idx] += g.cost / scale
+        self.packed[idx] += g.bytes
+        if g.stage_id is not None:
+            self.placed_stage[g.stage_id] = idx
+        self._placed_any = True
+
+    def wipe_placement(self) -> None:
+        """Drop every placement (rebalance repack): loads reset to the
+        initial seeding, books cleared; groups/finished sets survive."""
+        self.assignment.clear()
+        self.placed_stage.clear()
+        for i in range(len(self.bins)):
+            self.load[i] = bin_load(self.initial_load, self.bins, i)
+            self.active_load[i] = 0.0
+            self.packed[i] = 0
+        self._placed_any = False
+
+    # -- views ---------------------------------------------------------
+    def candidates(self, g: TaskGroup) -> list[int]:
+        """Live bin indices ``g`` may be placed on (capability-checked)."""
+        live = sorted(self.live)
+        idx = eligible_bins(g.requires, [self.bins[i] for i in live])
+        out = [live[j] for j in idx]
+        if not out:
+            names = ", ".join(sorted(n.name for n in g.nodes))
+            raise ValueError(
+                f"group [{names}] requires capabilities "
+                f"{sorted(g.requires)} but no live bin offers them")
+        return out
+
+    @property
+    def virgin(self) -> bool:
+        """True until the first placement is recorded — a virgin state
+        with all bins live is exactly the one-shot ``assign`` setting."""
+        return not self._placed_any
+
+
+def _group_scale(g: TaskGroup, b: Any) -> float:
+    """Compute speedup of group ``g`` on bin ``b`` (mesh-sharded groups
+    scale linearly over the slice; same rule as ``policies._mesh_scale``)."""
+    return bin_compute_scale(b) if "mesh" in g.requires else 1.0
+
+
 def bin_index(bins: Sequence[Any], target: Any) -> int | None:
     """Locate ``target`` among ``bins`` by identity then equality (device
     objects may not define ``__eq__``; strings/shardings do)."""
@@ -258,11 +431,98 @@ class Scheduler(abc.ABC):
         *,
         initial_load: Mapping[Any, float] | None = None,
     ) -> dict[int, Any]:
+        """One-shot offline placement: a single :meth:`update` carrying
+        the whole graph as ``new_tasks`` against a fresh state."""
         if not bins:
             raise ValueError("no device bins to place onto")
         groups = build_groups(graph, cost_fn)
-        assignment = self.assign(graph, groups, bins, initial_load=initial_load)
-        return apply_assignment(graph, groups, bins, assignment)
+        state = SchedulerState(bins, initial_load=initial_load)
+        self.update(state, SchedulerUpdate(new_tasks=tuple(groups)),
+                    graph=graph)
+        return apply_assignment(graph, groups, bins, state.assignment)
+
+    def update(
+        self,
+        state: SchedulerState,
+        event: SchedulerUpdate,
+        *,
+        graph: Heteroflow | None = None,
+    ) -> dict[Hashable, int]:
+        """Consume one event batch; return the **placement delta** —
+        only the groups (re)placed by this call, as ``{root: bin_index}``
+        into ``state.bins``.  Existing assignments are never touched
+        except for groups displaced by a retired bin.
+
+        Event processing order: bins join → finishes/readies are
+        booked → bins retire (their unfinished groups are displaced) →
+        new + displaced groups are placed incrementally via
+        :meth:`place_update`.  An *empty* event with
+        ``state.measured_load`` set triggers a rebalance instead (the
+        event-loop form of the deprecated :meth:`reschedule`):
+        hot-group migration when ``state.migrate_top_k > 0``, else a
+        full repack seeded with the rescaled measured load.
+
+        ``graph`` is optional context: offline callers pass the full
+        graph (exact upward ranks for HEFT); online callers usually
+        cannot — policies then rank within the event.
+        """
+        for b in event.new_bins:
+            state.add_bin(b)
+        for g in event.new_finished_tasks:
+            state.mark_finished(g)
+        for g in event.new_ready_tasks:
+            state.mark_ready(g)
+        displaced: list[TaskGroup] = []
+        for b in event.retired_bins:
+            displaced.extend(state.retire_bin(b))
+        new = list(event.new_tasks)
+        for g in new:
+            state.add_group(g)
+        seen = {g.root for g in new}
+        to_place = new + [g for g in displaced if g.root not in seen]
+        if to_place:
+            return self.place_update(state, to_place, graph=graph)
+        if state.measured_load is not None and state.groups:
+            return self._rebalance(state, graph=graph)
+        return {}
+
+    def place_update(
+        self,
+        state: SchedulerState,
+        groups: Sequence[TaskGroup],
+        *,
+        graph: Heteroflow | None = None,
+    ) -> dict[Hashable, int]:
+        """Incrementally place ``groups`` against accumulated state.
+
+        Base implementation delegates to :meth:`assign` over the live
+        bins with the accumulated per-slot load as ``initial_load`` —
+        policies whose decisions are a pure function of (groups, loads)
+        (balanced packing and any third-party ``assign``-only subclass)
+        are incremental for free.  Stateful policies (HEFT lane clocks,
+        cursors) override this and keep their books in
+        ``state.scratch``.
+        """
+        live = sorted(state.live)
+        if state.virgin and len(live) == len(state.bins):
+            # fresh state, full bin list: exactly the one-shot assign
+            # call (object-keyed initial_load passes through verbatim)
+            a = self.assign(graph, groups, state.bins,
+                            initial_load=state.initial_load)
+            delta: dict[Hashable, int] = {}
+            for g in groups:
+                state.record(g, a[g.root])
+                delta[g.root] = a[g.root]
+            return delta
+        sub = [state.bins[i] for i in live]
+        load = {j: state.load[live[j]] for j in range(len(live))}
+        a = self.assign(graph, groups, sub, initial_load=load)
+        delta = {}
+        for g in groups:
+            idx = live[a[g.root]]
+            state.record(g, idx)
+            delta[g.root] = idx
+        return delta
 
     def reschedule(
         self,
@@ -273,45 +533,95 @@ class Scheduler(abc.ABC):
         measured_load: Mapping[Any, float],
         migrate_top_k: int = 0,
     ) -> dict[int, Any]:
-        """Dynamic re-placement between graph iterations.
+        """Deprecated: dynamic re-placement between graph iterations.
+
+        .. deprecated::
+            Use :meth:`update` with an empty :class:`SchedulerUpdate`
+            and ``state.measured_load`` / ``state.migrate_top_k`` set —
+            a reschedule *is* an update with measured-load state and no
+            new tasks.  See the migration guide in docs/scheduling.md.
+            This shim delegates and will be removed two PRs after the
+            online-scheduling release.
 
         ``measured_load`` maps each bin — by object, or by bin *index*
         when bin objects are duplicated/equal and an object key would
         collapse slots — to the busy *seconds* the executor observed on
-        it since the last (re-)placement.  Seconds are not the cost
-        units policies pack with, so they are rescaled into cost units
-        (total group cost / total measured seconds) before being fed
-        through the existing ``initial_load`` hook — a bin that soaked
-        up 60% of the measured time starts the new packing with 60% of
-        the graph's cost already "resident", steering the next
-        iteration's load away from it.
-
-        ``migrate_top_k > 0`` switches from full repacking to **hot-group
-        migration**: keep the current placement and move at most ``k`` of
-        the costliest groups from overloaded bins to underloaded ones —
-        and move *nothing* when loads are already near-equal, so
-        balanced topologies stop churning placement (full repacking
-        re-derives the whole assignment every window, shuffling groups
-        between equally-loaded bins and invalidating warm device
-        state for zero gain).  Falls back to full repacking when the
-        graph carries no prior placement to migrate from.
+        it since the last (re-)placement.  Seconds are rescaled into
+        cost units (total group cost / total measured seconds) before
+        seeding the repack.  ``migrate_top_k > 0`` moves at most ``k``
+        hot groups instead of repacking (see :meth:`update`).
         """
+        warnings.warn(
+            "Scheduler.reschedule() is deprecated; drive Scheduler.update() "
+            "with SchedulerState.measured_load instead (see the online-"
+            "scheduling migration guide in docs/scheduling.md)",
+            DeprecationWarning, stacklevel=2)
         groups = build_groups(graph, cost_fn)
-        if migrate_top_k > 0:
-            assignment = self._migrate(groups, bins,
-                                       measured_load=measured_load,
-                                       top_k=migrate_top_k)
-            if assignment is not None:
-                return apply_assignment(graph, groups, bins, assignment)
+        state = SchedulerState(bins, migrate_top_k=migrate_top_k)
+        for g in groups:
+            state.add_group(g)
+        state.measured_load = measured_load
+        self.update(state, SchedulerUpdate(), graph=graph)
+        return apply_assignment(graph, groups, bins, state.assignment)
+
+    def _rebalance(
+        self,
+        state: SchedulerState,
+        *,
+        graph: Heteroflow | None = None,
+    ) -> dict[Hashable, int]:
+        """Empty-event + measured-load path: migrate or repack.
+
+        Consumes ``state.measured_load`` (reset to ``None``).  Returns
+        only the entries that actually moved.
+        """
+        measured = state.measured_load
+        state.measured_load = None
+        groups = [g for r, g in state.groups.items()
+                  if r not in state.finished]
+        if not groups:
+            return {}
+        live = sorted(state.live)
+        full = len(live) == len(state.bins)
+        bins = state.bins if full else [state.bins[i] for i in live]
+        meas = (measured if full else
+                {j: bin_load(measured, state.bins, live[j])
+                 for j in range(len(live))})
+        prev = dict(state.assignment)
+        if state.migrate_top_k > 0:
+            current: dict[Hashable, int] | None = None
+            if all(g.root in prev for g in groups):
+                pos = {i: j for j, i in enumerate(live)}
+                cur = {g.root: pos.get(prev[g.root]) for g in groups}
+                if None not in cur.values():
+                    current = cur
+            a = self._migrate(groups, bins, measured_load=meas,
+                              top_k=state.migrate_top_k, current=current)
+            if a is not None:
+                return self._commit(state, groups, live, a, prev)
         total_cost = sum(g.cost for g in groups)
-        total_meas = sum(measured_load.values())
+        total_meas = sum(meas.values())
         if total_meas > 0 and total_cost > 0:
             scale = total_cost / total_meas
-            load = {b: v * scale for b, v in measured_load.items()}
+            load = {b: v * scale for b, v in meas.items()}
         else:
-            load = dict(measured_load)
-        assignment = self.assign(graph, groups, bins, initial_load=load or None)
-        return apply_assignment(graph, groups, bins, assignment)
+            load = dict(meas)
+        a = self.assign(graph, groups, bins, initial_load=load or None)
+        state.scratch.clear()     # stateful books are stale after a repack
+        return self._commit(state, groups, live, a, prev)
+
+    def _commit(self, state: SchedulerState, groups: Sequence[TaskGroup],
+                live: list[int], a: Mapping[Hashable, int],
+                prev: Mapping[Hashable, int]) -> dict[Hashable, int]:
+        """Re-record a rebalanced placement; return the moved entries."""
+        state.wipe_placement()
+        delta: dict[Hashable, int] = {}
+        for g in groups:
+            idx = live[a[g.root]]
+            state.record(g, idx)
+            if prev.get(g.root) != idx:
+                delta[g.root] = idx
+        return delta
 
     #: relative spread (max-min over mean measured load) below which
     #: migration considers bins balanced and keeps the placement as-is
@@ -319,31 +629,37 @@ class Scheduler(abc.ABC):
 
     def _migrate(self, groups: Sequence[TaskGroup], bins: Sequence[Any],
                  *, measured_load: Mapping[Any, float], top_k: int,
+                 current: Mapping[Hashable, int] | None = None,
                  ) -> dict[Hashable, int] | None:
         """Move ≤ ``top_k`` hottest groups off the most-loaded bins.
 
+        ``current`` is the prior placement; when ``None`` it is derived
+        from the graph write-back (``node.bin_key`` / ``node.device``).
         Returns ``None`` when any group lacks a prior placement (caller
         falls back to a full repack).  Load is tracked in measured
         seconds; a group's share of its bin's seconds is estimated by
         its cost fraction on that bin.  A move only happens when it
         shrinks the src/dst gap — near-equal loads yield zero moves.
         """
-        labels = bin_labels(bins)
-        slot = {label: i for i, label in enumerate(labels)}
-        current: dict[Hashable, int] = {}
-        for g in groups:
-            idx = None
-            for t in g.nodes:
-                if t.bin_key in slot:
-                    idx = slot[t.bin_key]
-                    break
-                if t.device is not None:
-                    idx = bin_index(bins, t.device)
-                    if idx is not None:
+        if current is not None:
+            current = dict(current)
+        else:
+            labels = bin_labels(bins)
+            slot = {label: i for i, label in enumerate(labels)}
+            current = {}
+            for g in groups:
+                idx = None
+                for t in g.nodes:
+                    if t.bin_key in slot:
+                        idx = slot[t.bin_key]
                         break
-            if idx is None:
-                return None                     # unplaced → full repack
-            current[g.root] = idx
+                    if t.device is not None:
+                        idx = bin_index(bins, t.device)
+                        if idx is not None:
+                            break
+                if idx is None:
+                    return None                 # unplaced → full repack
+                current[g.root] = idx
         load = {i: bin_load(measured_load, bins, i)
                 for i in range(len(bins))}
         mean = sum(load.values()) / len(load) if load else 0.0

@@ -23,12 +23,42 @@ from typing import Any, Hashable, Mapping, Sequence
 
 from repro.core.graph import Heteroflow, Node, TaskType
 
-from .base import Scheduler, TaskGroup, bin_load, group_candidates, register
+from .base import (Scheduler, SchedulerState, TaskGroup, bin_load,
+                   group_candidates, register)
 from .bins import (bin_compute_scale, bin_lane_width, bin_memory_bytes,
                    stage_link)
 from .simulator import CostModel
 
 __all__ = ["BalancedBins", "Heft", "RoundRobin", "RandomPolicy"]
+
+
+def _event_order(nodes: Sequence[Node]) -> list[Node]:
+    """Deterministic topological order over an event-local node set
+    (Kahn by ascending node id).  Used when ``update()`` is called
+    without the full graph: HEFT then ranks within the event, ignoring
+    edges to groups it has not seen yet — exactly the information an
+    online scheduler has."""
+    import heapq
+
+    ids = {t.id for t in nodes}
+    byid = {t.id: t for t in nodes}
+    indeg = {t.id: sum(1 for d in t.dependents if d.id in ids)
+             for t in nodes}
+    ready = [i for i, d in indeg.items() if d == 0]
+    heapq.heapify(ready)
+    out: list[Node] = []
+    while ready:
+        i = heapq.heappop(ready)
+        n = byid[i]
+        out.append(n)
+        for s in n.successors:
+            if s.id in indeg:
+                indeg[s.id] -= 1
+                if indeg[s.id] == 0:
+                    heapq.heappush(ready, s.id)
+    if len(out) != len(nodes):
+        raise ValueError("event task set contains a cycle")
+    return out
 
 
 def _over_budget(g: TaskGroup, cap: int | None, packed: int) -> int:
@@ -142,16 +172,29 @@ class RoundRobin(Scheduler):
                bins: Sequence[Any], *,
                initial_load: Mapping[Any, float] | None = None,
                ) -> dict[Hashable, int]:
-        assignment: dict[Hashable, int] = {}
-        cursor = 0
+        state = SchedulerState(bins, initial_load=initial_load)
+        for g in groups:
+            state.add_group(g)
+        return self.place_update(state, list(groups), graph=graph)
+
+    def place_update(self, state: SchedulerState,
+                     groups: Sequence[TaskGroup], *,
+                     graph: Heteroflow | None = None,
+                     ) -> dict[Hashable, int]:
+        # the cursor survives across events (state.scratch), so online
+        # arrivals keep cycling instead of restarting at bin 0 per event
+        cursor = state.scratch.get("rr_cursor", 0)
+        delta: dict[Hashable, int] = {}
         for g in sorted(groups, key=lambda g: g.order):
-            idx = self._pinned_index(g, bins)
-            if idx is None:
-                cand = group_candidates(g, bins)
+            idx = self._pinned_index(g, state.bins)
+            if idx is None or idx not in state.live:
+                cand = state.candidates(g)
                 idx = cand[cursor % len(cand)]
                 cursor += 1
-            assignment[g.root] = idx
-        return assignment
+            state.record(g, idx)
+            delta[g.root] = idx
+        state.scratch["rr_cursor"] = cursor
+        return delta
 
 
 @register
@@ -168,15 +211,30 @@ class RandomPolicy(Scheduler):
                bins: Sequence[Any], *,
                initial_load: Mapping[Any, float] | None = None,
                ) -> dict[Hashable, int]:
-        rng = random.Random(self.seed)
-        assignment: dict[Hashable, int] = {}
+        state = SchedulerState(bins, initial_load=initial_load)
+        for g in groups:
+            state.add_group(g)
+        return self.place_update(state, list(groups), graph=graph)
+
+    def place_update(self, state: SchedulerState,
+                     groups: Sequence[TaskGroup], *,
+                     graph: Heteroflow | None = None,
+                     ) -> dict[Hashable, int]:
+        # one rng per state: the draw sequence continues across events,
+        # so an online run stays a single seeded sample, not a restart
+        rng = state.scratch.get("random_rng")
+        if rng is None:
+            rng = state.scratch["random_rng"] = random.Random(self.seed)
+        delta: dict[Hashable, int] = {}
         for g in sorted(groups, key=lambda g: g.order):
-            idx = self._pinned_index(g, bins)
-            if idx is None:
-                cand = group_candidates(g, bins)
+            idx = self._pinned_index(g, state.bins)
+            if idx is None or idx not in state.live:
+                cand = state.candidates(g)
                 idx = cand[rng.randrange(len(cand))]
-            assignment[g.root] = idx
-        return assignment
+            state.record(g, idx)
+            delta[g.root] = idx
+        state.scratch["random_rng"] = rng
+        return delta
 
 
 @register
@@ -239,26 +297,54 @@ class Heft(Scheduler):
                bins: Sequence[Any], *,
                initial_load: Mapping[Any, float] | None = None,
                ) -> dict[Hashable, int]:
-        model = self.cost_model
-        n_bins = len(bins)
-        mean_speed = (sum(model.speed(i) for i in range(n_bins)) / n_bins
-                      ) or 1.0
+        state = SchedulerState(bins, initial_load=initial_load)
+        for g in groups:
+            state.add_group(g)
+        return self.place_update(state, list(groups), graph=graph)
 
-        group_of: dict[int, Hashable] = {}
+    def place_update(self, state: SchedulerState,
+                     groups: Sequence[TaskGroup], *,
+                     graph: Heteroflow | None = None,
+                     ) -> dict[Hashable, int]:
+        """Incremental EFT: place only ``groups``, against lane clocks
+        and group finish times persisted in ``state.scratch`` — earlier
+        events' placements are facts, never revisited.  A decode group
+        whose prefill predecessor was placed two events ago still sees
+        its finish time and pays :meth:`CostModel.transfer_time` if it
+        lands on a different bin, which is exactly the KV-locality
+        pull the serving engine relies on.  With a fresh state and the
+        full graph this is bit-identical to classic one-shot HEFT.
+        """
+        if not groups:
+            return {}
+        model = self.cost_model
+        bins = state.bins
+        live = sorted(state.live)
+        mean_speed = (sum(model.speed(i) for i in live) / len(live)) or 1.0
+
+        sc = state.scratch.setdefault("heft", {})
+        group_of: dict[int, Hashable] = sc.setdefault("group_of", {})
         for g in groups:
             for t in g.nodes:
                 group_of[t.id] = g.root
 
-        # -- upward ranks over the full node graph (host tasks included:
-        # they sit on critical paths between kernels) -------------------
-        order = graph.topological_order()
-        if order is None:
-            raise ValueError(f"graph '{graph.name}' contains a cycle")
+        # -- upward ranks: over the full node graph when offline callers
+        # provide it (host tasks included: they sit on critical paths
+        # between kernels), else over the event's own nodes — edges to
+        # not-yet-seen groups are simply unknown futures ----------------
+        if graph is not None:
+            order = graph.topological_order()
+            if order is None:
+                raise ValueError(f"graph '{graph.name}' contains a cycle")
+        else:
+            order = _event_order([t for g in groups for t in g.nodes])
         rank: dict[int, float] = {}
         for n in reversed(order):
             w = model.node_time(n, speed=mean_speed)
             best = 0.0
             for s in n.successors:
+                if s.id not in rank:
+                    continue       # successor outside this event's horizon
                 comm = 0.0
                 gn, gs = group_of.get(n.id), group_of.get(s.id)
                 if gn is not None and gs is not None and gn != gs:
@@ -266,11 +352,14 @@ class Heft(Scheduler):
                 best = max(best, comm + rank[s.id])
             rank[n.id] = w + best
 
-        group_rank = {g.root: max(rank[t.id] for t in g.nodes) for g in groups}
-        stage_of = {g.root: g.stage_id for g in groups}
-        n_cells = {g.root: sum(1 for t in g.nodes
-                               if t.type == TaskType.KERNEL)
-                   for g in groups}
+        group_rank = {g.root: max(rank[t.id] for t in g.nodes)
+                      for g in groups}
+        stage_of: dict[Hashable, int | None] = sc.setdefault("stage_of", {})
+        n_cells: dict[Hashable, int] = sc.setdefault("n_cells", {})
+        for g in groups:
+            stage_of[g.root] = g.stage_id
+            n_cells[g.root] = sum(1 for t in g.nodes
+                                  if t.type == TaskType.KERNEL)
         # cross-group predecessor map (for EFT data-ready times), plus
         # the DISTINCT upstream producers per group pair: adjacent
         # pipeline stages are only *pipelined* (cell-by-cell) when
@@ -300,27 +389,40 @@ class Heft(Scheduler):
         # have several), so availability is a per-server list: a
         # mesh-sharded group occupies every server of its slice, any
         # other task takes the earliest-free one — mirroring the
-        # simulator's multi-server lane model exactly.
+        # simulator's multi-server lane model exactly.  The clocks live
+        # in scratch and keep ticking across events; bins added since
+        # the last event start with idle (zero) lanes.
         overlap = model.lane_depth >= 2
-        widths = [bin_lane_width(b) for b in bins]
         caps = [bin_memory_bytes(b) for b in bins]
-        packed = [0] * n_bins
-        init_s = [bin_load(initial_load, bins, i)
-                  / (model.compute_rate * (model.speed(i) or 1.0))
-                  for i in range(n_bins)]
-        copy_free = [[init_s[i]] * widths[i] for i in range(n_bins)]
-        compute_free = ([list(s) for s in copy_free] if overlap
-                        else copy_free)
-        finish: dict[Hashable, float] = {}
-        start_c: dict[Hashable, float] = {}   # compute start (placed groups)
-        cell_t: dict[Hashable, float] = {}    # per-cell compute time
-        placed: dict[Hashable, int] = {}
-        assignment: dict[Hashable, int] = {}
+        copy_free: list[list[float]] = sc.get("copy_free")
+        if copy_free is None:
+            init_s = [bin_load(state.initial_load, bins, i)
+                      / (model.compute_rate * (model.speed(i) or 1.0))
+                      for i in range(len(bins))]
+            copy_free = [[init_s[i]] * bin_lane_width(bins[i])
+                         for i in range(len(bins))]
+            compute_free = ([list(s) for s in copy_free] if overlap
+                            else copy_free)
+            sc["copy_free"], sc["compute_free"] = copy_free, compute_free
+        else:
+            compute_free = sc["compute_free"]
+            while len(copy_free) < len(bins):      # bins added by events
+                lanes = [0.0] * bin_lane_width(bins[len(copy_free)])
+                copy_free.append(lanes)
+                if overlap:
+                    compute_free.append(list(lanes))
+        finish: dict[Hashable, float] = sc.setdefault("finish", {})
+        start_c: dict[Hashable, float] = sc.setdefault("start_c", {})
+        cell_t: dict[Hashable, float] = sc.setdefault("cell_t", {})
+        placed = state.assignment                   # prior events included
+        delta: dict[Hashable, int] = {}
         for g in sorted(groups, key=lambda g: (-group_rank[g.root], g.order)):
             pinned = self._pinned_index(g, bins)
+            if pinned is not None and pinned not in state.live:
+                pinned = None                       # pinned bin retired
             wide = "mesh" in g.requires
             best: tuple[int, float, float, float] | None = None
-            candidates = (group_candidates(g, bins) if pinned is None
+            candidates = (state.candidates(g) if pinned is None
                           else (pinned,))
             # pull time is bandwidth-bound — identical on every candidate
             # (a sharded group splits it across the slice's copy lanes)
@@ -372,7 +474,7 @@ class Heft(Scheduler):
                 eft = (max(copy_done, compute_avail) + kern_t
                        if kern_t > 0 else max(copy_done, copy_avail))
                 if caps[i] is not None and g.bytes > 0:
-                    over = packed[i] + g.bytes - caps[i]
+                    over = state.packed[i] + g.bytes - caps[i]
                     if over > 0:   # eviction penalty: the spill round
                         eft += model.spill_time(over)  # trip sim charges
                 if best is None or eft < best[1]:
@@ -386,9 +488,8 @@ class Heft(Scheduler):
                     servers[min(range(len(servers)),
                                 key=servers.__getitem__)] = until
 
-            assignment[g.root] = idx
-            placed[g.root] = idx
-            packed[idx] += g.bytes
+            state.record(g, idx)          # assignment + load/bytes books
+            delta[g.root] = idx
             finish[g.root] = eft
             start_c[g.root] = eft - kern_t
             cell_t[g.root] = kern_t / max(n_cells[g.root], 1)
@@ -396,7 +497,7 @@ class Heft(Scheduler):
                 _occupy(copy_free[idx], copy_done)
             if kern_t > 0 or not overlap:
                 _occupy(compute_free[idx], eft)
-        return assignment
+        return delta
 
 
 def gather_sources(node: Node) -> list[Node]:

@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping, Sequence
 
@@ -59,7 +60,68 @@ from .bins import (bin_compute_scale, bin_lane_width, bin_memory_bytes,
                    mesh_wide, stage_link)
 from .profile import producer_bytes
 
-__all__ = ["CostModel", "SimReport", "simulate"]
+__all__ = ["ArrivalProcess", "CostModel", "SimReport", "poisson", "simulate",
+           "weak_components"]
+
+
+@dataclass(frozen=True)
+class ArrivalProcess:
+    """Deterministic arrival-time generator for online simulation.
+
+    ``times(n)`` returns ``n`` monotonically increasing arrival seconds;
+    the same (rate, seed) always yields the same sequence, so simulated
+    latency studies are reproducible bit-for-bit.
+    """
+
+    rate: float
+    seed: int = 0
+
+    def times(self, n: int) -> list[float]:
+        rng = random.Random(self.seed)
+        t, out = 0.0, []
+        for _ in range(n):
+            t += rng.expovariate(self.rate)
+            out.append(t)
+        return out
+
+
+def poisson(rate: float, seed: int = 0) -> ArrivalProcess:
+    """Poisson arrivals at ``rate`` requests/second (exponential
+    inter-arrival gaps) — ``simulate(..., arrivals=poisson(8))``."""
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be > 0, got {rate!r}")
+    return ArrivalProcess(rate=rate, seed=seed)
+
+
+def weak_components(graph: Heteroflow) -> tuple[dict[int, int], int]:
+    """Weakly-connected components of the task graph — one *request* in
+    a serving trace, where each request contributes an independent
+    prefill→decode chain.  Returns ``({node.id: component}, count)``
+    with components numbered by their smallest node id, i.e. request
+    submission order (node ids are globally monotonic)."""
+    parent: dict[int, int] = {}
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for n in graph.nodes:
+        parent.setdefault(n.id, n.id)
+    for n in graph.nodes:
+        for s in n.successors:
+            if s.id in parent:
+                ra, rb = find(n.id), find(s.id)
+                if ra != rb:
+                    parent[rb] = ra
+    rep_min: dict[int, int] = {}
+    for nid in parent:
+        r = find(nid)
+        rep_min[r] = min(rep_min.get(r, nid), nid)
+    order = {r: i for i, (r, _) in enumerate(
+        sorted(rep_min.items(), key=lambda kv: kv[1]))}
+    return {nid: order[find(nid)] for nid in parent}, len(order)
 
 
 @dataclass(frozen=True)
@@ -425,6 +487,13 @@ class SimReport:
     n_spills: int = 0
     #: seconds charged to those evictions (D2H + refill round trips)
     spill_seconds: float = 0.0
+    #: per-request latency rows (``simulate(..., arrivals=...)`` only;
+    #: one per weakly-connected component, in arrival order):
+    #: ``{"arrival": s, "ttft": s, "complete": s}`` where *ttft* is the
+    #: first kernel finish minus arrival (time-to-first-token on a
+    #: prefill→decode chain) and *complete* is the last finish minus
+    #: arrival (total request latency).
+    request_latency: list = field(repr=False, default_factory=list)
 
     @property
     def divergence(self) -> float | None:
@@ -503,6 +572,7 @@ def simulate(
     cost_model: CostModel | None = None,
     host_workers: int = 4,
     replay: Any = None,
+    arrivals: "ArrivalProcess | Sequence[float] | None" = None,
 ) -> SimReport:
     """Simulate ``graph`` under a ``{node.id: bin}`` placement.
 
@@ -511,6 +581,15 @@ def simulate(
     run on the worker pool only.  Pushes ride the copy lane of their
     source pull's bin (D2H).  ``replay`` reconstructs a recorded run
     instead of consulting the cost model — see the module docstring.
+
+    ``arrivals`` switches the simulator from batch to **online** mode:
+    each weakly-connected component of the graph is one *request*
+    (see :func:`weak_components`) released at the corresponding arrival
+    time — an :func:`poisson` process or an explicit time list, in
+    component (= submission) order.  Source tasks then dispatch at
+    their request's arrival instead of t=0, and the report gains
+    :attr:`SimReport.request_latency` (TTFT + completion per request).
+    ``arrivals=None`` is the unchanged batch path, bit-for-bit.
     """
     model = cost_model or CostModel()
     overlap = model.lane_depth >= 2
@@ -669,16 +748,59 @@ def simulate(
         schedule.append((n.id, kind, b, start, start + dur))
         heapq.heappush(events, (start + dur, n.id))
 
-    # sources dispatch at t=0 in node-id order (deterministic)
-    for n in sorted(graph.nodes, key=lambda n: n.id):
-        if pending[n.id] == 0:
+    # online mode: map every node to its request component's release time
+    release: dict[int, float] = {}
+    comp_of: dict[int, int] = {}
+    arrive_at: list[float] = []
+    if arrivals is not None:
+        comp_of, n_comp = weak_components(graph)
+        arrive_at = (arrivals.times(n_comp)
+                     if hasattr(arrivals, "times") else list(arrivals))
+        if len(arrive_at) < n_comp:
+            raise ValueError(
+                f"{n_comp} request components but only "
+                f"{len(arrive_at)} arrival times")
+        release = {nid: arrive_at[c] for nid, c in comp_of.items()}
+
+    # batch mode: sources dispatch at t=0 in node-id order
+    # (deterministic, unchanged).  Online mode: sources are RELEASED
+    # chronologically inside the event loop — dispatching a future
+    # request's pulls eagerly would reserve workers/lanes ahead of work
+    # that is actually ready now (dispatch reserves in call order).
+    sources = [n for n in sorted(graph.nodes, key=lambda n: n.id)
+               if pending[n.id] == 0]
+    if arrivals is None:
+        for n in sources:
             arrival[n.id] = 0.0
             dispatch(n, 0.0)
+        releases: list[tuple[float, int]] = []
+    else:
+        releases = sorted(((release.get(n.id, 0.0), n.id) for n in sources))
+    r_at = 0
+
+    def pump(now: float) -> int:
+        """Dispatch every not-yet-released source due at or before ``now``."""
+        nonlocal r_at
+        n_released = 0
+        while r_at < len(releases) and releases[r_at][0] <= now:
+            t0, nid = releases[r_at]
+            r_at += 1
+            arrival[nid] = t0
+            dispatch(node_by_id[nid], t0)
+            n_released += 1
+        return n_released
 
     done = 0
     total = len(graph.nodes)
-    while events:
-        t, nid = heapq.heappop(events)
+    while events or r_at < len(releases):
+        if not events:
+            pump(releases[r_at][0])
+            continue
+        t, nid = events[0]
+        if r_at < len(releases) and releases[r_at][0] <= t:
+            pump(releases[r_at][0])
+            continue
+        heapq.heappop(events)
         done += 1
         n = node_by_id[nid]
         # successors in id order so equal-time readiness ties are stable
@@ -706,6 +828,22 @@ def simulate(
     # it past 1.0 (busy sums both lane classes), as for device bins
     util = {i: (busy[i] / (makespan * widths[i]) if makespan > 0 else 0.0)
             for i in busy}
+    request_latency: list[dict[str, float]] = []
+    if arrivals is not None:
+        first_kernel: dict[int, float] = {}
+        first_any: dict[int, float] = {}
+        last: dict[int, float] = {}
+        for nid, c in comp_of.items():
+            f = finish[nid]
+            if node_by_id[nid].type == TaskType.KERNEL:
+                first_kernel[c] = min(first_kernel.get(c, f), f)
+            first_any[c] = min(first_any.get(c, f), f)
+            last[c] = max(last.get(c, f), f)
+        for c in sorted(last):
+            arr = arrive_at[c]
+            ttft = first_kernel.get(c, first_any[c]) - arr
+            request_latency.append({"arrival": arr, "ttft": ttft,
+                                    "complete": last[c] - arr})
     return SimReport(
         makespan=makespan,
         busy=busy,
@@ -720,4 +858,5 @@ def simulate(
         peak_bytes=peak_bytes,
         n_spills=n_spills,
         spill_seconds=spill_seconds,
+        request_latency=request_latency,
     )

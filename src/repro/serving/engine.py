@@ -6,28 +6,56 @@ Each engine *tick* is one iteration of a repeated task graph
     host(admit+schedule) → pull(new prompts) → kernel(prefill)
                                              → kernel(decode)  → push(tokens)
 
-Algorithm-1 placement packs request groups onto replicas when the engine
-is constructed with several device bins; KV capacity is governed by the
-:class:`~repro.serving.kv_cache.PagedKVArena` buddy pool — a request is
-admitted only when the arena can host its page run (otherwise it queues),
-the vLLM admission rule built on the paper's allocator.
+**Online scheduling (PR 7)**: the engine holds a long-lived scheduling
+policy (``scheduler=``, default HEFT) and a persistent
+:class:`~repro.sched.SchedulerState` over its KV bins.  Admission turns
+every request into a two-group mini-trace — ``pull(prompt KV) →
+kernel(prefill{id}) → kernel(decode{id})`` appended to one engine-lifetime
+accounting graph — and feeds it through :meth:`Scheduler.update` as a
+:class:`~repro.sched.SchedulerUpdate` event (estee-style delta, never a
+full repack).  The prefill placement decides which bin's
+:class:`~repro.serving.kv_cache.PagedKVArena` hosts the request's pages;
+if the scheduler lands the decode group elsewhere, the engine migrates
+the pages and charges ``CostModel.transfer_time`` over the KV span
+(``kv_moves`` / ``kv_move_seconds`` stats) — the KV-locality rule.
+Retirement feeds ``new_finished_tasks`` back; :meth:`add_bin` /
+:meth:`retire_bin` join/drain replicas through ``new_bins`` /
+``retired_bins`` at the next tick, migrating or preempting the drained
+bin's residents.
+
+**Request lifecycle**: :class:`Request` is a frozen public record moving
+``queued → prefill → decoding → done`` (``preempted`` on eviction, back
+to the queue head).  :meth:`submit` / :meth:`poll` / :meth:`step` are
+the public surface; per-request TTFT and inter-token latency feed the
+p50/p99 columns of :meth:`stats` (injectable ``clock=`` for tests).
+
+KV capacity is governed per bin by the :class:`PagedKVArena` buddy pool —
+a request is admitted only when its bin's arena can host its page run
+(otherwise it queues), the vLLM admission rule built on the paper's
+allocator.
 
 **Grow/preempt rule**: a page-run grow (``PagedKVArena.extend``) frees
 the old run before allocating the doubled one, so coalescing can satisfy
 it in a near-full arena.  When even that fails, the engine does not
-crash the tick: it preempts the *youngest* active request — releasing
-its pages and re-queueing it at the queue head with its generated tokens
-reset (greedy decoding recomputes them identically) — and retries the
-grow.  Admission reserves ``prompt + max_new_tokens`` up front, so grows
-only bind when requests were seated with smaller reservations.
+crash the tick: it preempts the youngest *other* request on the same
+arena — releasing its pages and re-queueing it at the queue head with
+its generated tokens reset (greedy decoding recomputes them
+identically) — and retries the grow.  Only when no other victim exists
+does the grower give up its own seat (self-preemption used to be
+preferred whenever the grower was youngest, which livelocked: the
+request re-seated, re-grew, and re-evicted itself forever while an
+older request's pages sat untouched).  Admission reserves ``prompt +
+max_new_tokens`` up front, so grows only bind when requests were seated
+with smaller reservations.
 """
 from __future__ import annotations
 
 import itertools
 import threading
+import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -37,43 +65,115 @@ from ..configs.base import ModelConfig
 from ..core import Executor, Heteroflow
 from ..core.memory import OutOfMemory
 from ..models import transformer
+from ..sched import (
+    CostModel,
+    Scheduler,
+    SchedulerState,
+    SchedulerUpdate,
+    TaskGroup,
+    build_groups,
+    get_scheduler,
+    percentile,
+)
 from .kv_cache import PagedKVArena
 
+#: request lifecycle states (``Request.state``)
+QUEUED, PREFILL, DECODING, DONE, PREEMPTED = (
+    "queued", "prefill", "decoding", "done", "preempted")
+LIFECYCLE = (QUEUED, PREFILL, DECODING, DONE, PREEMPTED)
 
-@dataclass
+#: abstract cost units per token, mirroring the serving-trace workload
+#: (``benchmarks.workloads.build_serving_trace``) so the simulator study
+#: and the live engine feed the scheduler the same shape
+_PREFILL_COST_PER_TOKEN = 2.0
+_DECODE_COST_PER_TOKEN = 6.0
+
+
+@dataclass(frozen=True, eq=False)
 class Request:
+    """Public, immutable view of one serving request.
+
+    The identity fields are frozen; the engine advances the mutable
+    lifecycle bookkeeping (``state``, timing marks, the ``generated``
+    token list) internally — user code reads, never writes.  ``state``
+    moves ``queued → prefill → decoding → done``; a preempted request
+    shows ``preempted`` until it is re-seated.
+    """
+
     id: int
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int
     generated: list[int] = field(default_factory=list)
-    done: bool = False
+    arrival_s: float = 0.0
+    state: str = QUEUED
+    first_token_s: float | None = None
+    finished_s: float | None = None
+
+    @property
+    def done(self) -> bool:
+        return self.state == DONE
 
     @property
     def total_tokens(self) -> int:
         return len(self.prompt) + len(self.generated)
 
+    def _advance(self, **fields: Any) -> None:
+        """Engine-internal lifecycle mutation on the frozen record."""
+        for k, v in fields.items():
+            object.__setattr__(self, k, v)
+
 
 class ServingEngine:
-    """Slot-based continuous batching over a single model replica.
+    """Slot-based continuous batching over one or more model replicas.
 
     ``max_slots`` concurrent requests share a stacked KV cache of
-    ``max_seq`` tokens per slot; the paged arena does admission control
-    and utilization accounting.  Greedy sampling (argmax) — sampling
-    strategies are orthogonal to the scheduling contribution.
+    ``max_seq`` tokens per slot; each bin's paged arena does admission
+    control and utilization accounting, and the ``scheduler`` policy
+    places request groups onto bins through the event-driven
+    ``update()`` loop.  Greedy sampling (argmax) — sampling strategies
+    are orthogonal to the scheduling contribution.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
                  max_seq: int = 256, page_tokens: int = 16,
-                 executor: Executor | None = None):
+                 executor: Executor | None = None,
+                 bins: "Sequence[Any] | int | None" = None,
+                 scheduler: "Scheduler | str" = "heft",
+                 cost_model: CostModel | None = None,
+                 clock: Callable[[], float] | None = None):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.max_seq = max_seq
-        kv_bytes = self._kv_bytes_per_token(cfg)
-        self.arena = PagedKVArena(
-            n_pages=max_slots * -(-max_seq // page_tokens),
-            page_tokens=page_tokens, kv_bytes_per_token=kv_bytes)
+        self.page_tokens = page_tokens
+        self.kv_bytes_per_token = self._kv_bytes_per_token(cfg)
+        self.cost_model = cost_model or CostModel()
         self.executor = executor
+        self._clock = clock or time.monotonic
+
+        if bins is None:
+            bins = ["kv0"]
+        elif isinstance(bins, int):
+            bins = [f"kv{i}" for i in range(max(1, bins))]
+        if isinstance(scheduler, str):
+            kwargs = ({"cost_model": self.cost_model}
+                      if scheduler == "heft" else {})
+            scheduler = get_scheduler(scheduler, **kwargs)
+        self.scheduler = scheduler
+        self._sched_state = SchedulerState(list(bins))
+        #: engine-lifetime accounting graph: every admission appends its
+        #: request's mini-trace here so group roots (node ids) stay
+        #: unique across requests — never executed, only group-built
+        self._trace = Heteroflow("serving_admissions")
+        self._req_groups: dict[int, tuple[TaskGroup, ...]] = {}
+        self._placed: dict[int, tuple[tuple[TaskGroup, ...], int, int]] = {}
+        self._home: dict[int, int] = {}        # request id -> bin index
+        self._pending_new_bins: list[Any] = []
+        self._pending_retire_bins: list[Any] = []
+
+        n_pages = max_slots * -(-max_seq // page_tokens)
+        self._arenas: dict[int, PagedKVArena] = {
+            i: self._new_arena(n_pages) for i in self._sched_state.live}
         self._queue: deque[Request] = deque()
         self._slots: list[Request | None] = [None] * max_slots
         self._ids = itertools.count()
@@ -89,19 +189,61 @@ class ServingEngine:
             lambda p, t, c: transformer.decode_step(cfg, p, t, c))
         self.ticks = 0
         self.preemptions = 0
+        self.kv_moves = 0
+        self.kv_move_seconds = 0.0
+        self._ttft: list[float] = []
+        self._itl: list[float] = []
+        self._last_token_s: dict[int, float] = {}
+
+    def _new_arena(self, n_pages: int) -> PagedKVArena:
+        return PagedKVArena(n_pages=n_pages, page_tokens=self.page_tokens,
+                            kv_bytes_per_token=self.kv_bytes_per_token)
 
     @staticmethod
     def _kv_bytes_per_token(cfg: ModelConfig) -> int:
         per_layer = 2 * cfg.n_kv_heads * cfg.head_dim_ * 2  # k+v bf16
         return max(1, per_layer * cfg.n_layers)
 
+    @property
+    def arena(self) -> PagedKVArena:
+        """The first live bin's arena (single-replica back-compat)."""
+        return self._arenas[min(self._sched_state.live)]
+
+    @property
+    def bins(self) -> list:
+        """Live KV bins, in slot order."""
+        s = self._sched_state
+        return [s.bins[i] for i in sorted(s.live)]
+
+    def _arena_of(self, req: Request) -> PagedKVArena:
+        return self._arenas[self._home.get(req.id,
+                                           min(self._sched_state.live))]
+
     # -- public API -------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        """Enqueue a request; returns its id (poll it with :meth:`poll`)."""
         req = Request(next(self._ids), np.asarray(prompt, np.int32),
-                      max_new_tokens)
+                      max_new_tokens, arrival_s=self._clock())
         with self._lock:
             self._queue.append(req)
         return req.id
+
+    def poll(self, request_id: int) -> Request | None:
+        """Non-blocking status lookup: the :class:`Request` record
+        (live view — its ``state``/``generated`` advance with the
+        engine) or ``None`` for an unknown id."""
+        with self._lock:
+            for r in itertools.chain(self.completed,
+                                     (s for s in self._slots if s),
+                                     self._queue):
+                if r.id == request_id:
+                    return r
+        return None
+
+    def step(self) -> bool:
+        """Advance the engine by one tick (admit → prefill → decode);
+        returns True while there is still work in flight."""
+        return self._tick()
 
     def run(self) -> list[Request]:
         """Run ticks until queue + slots drain.  If constructed with an
@@ -116,15 +258,132 @@ class ServingEngine:
             self.executor.run_until(g, lambda: not self._has_work()).result()
         return self.completed
 
+    def add_bin(self, bin_: Any) -> None:
+        """Join a KV replica bin at the next tick
+        (``SchedulerUpdate(new_bins=...)``)."""
+        with self._lock:
+            self._pending_new_bins.append(bin_)
+
+    def retire_bin(self, bin_: Any) -> None:
+        """Drain a KV replica bin at the next tick
+        (``SchedulerUpdate(retired_bins=...)``): residents migrate to
+        the re-placement the scheduler picks, or are preempted when the
+        destination arena cannot host their pages."""
+        with self._lock:
+            self._pending_retire_bins.append(bin_)
+
     def _has_work(self) -> bool:
         with self._lock:
             return bool(self._queue) or any(s is not None for s in self._slots)
 
     # -- scheduling core ---------------------------------------------------
+    def _apply_bin_events(self) -> None:
+        """Feed queued bin joins/drains through one SchedulerUpdate and
+        reconcile arenas + residents with the placement delta."""
+        with self._lock:
+            new = tuple(self._pending_new_bins)
+            gone = tuple(self._pending_retire_bins)
+            self._pending_new_bins.clear()
+            self._pending_retire_bins.clear()
+        if not (new or gone):
+            return
+        state = self._sched_state
+        gone_idx = {i for i in state.live
+                    if state.bins[i] in gone or i in gone}
+        n_pages = self.max_slots * -(-self.max_seq // self.page_tokens)
+        delta = self.scheduler.update(
+            state, SchedulerUpdate(new_bins=new, retired_bins=gone))
+        for i in state.live:
+            if i not in self._arenas:
+                self._arenas[i] = self._new_arena(n_pages)
+        moved_reqs = [r for r in self._slots
+                      if r is not None and self._home.get(r.id) in gone_idx]
+        for req in moved_reqs:
+            groups = self._req_groups.get(req.id, ())
+            dest = next((delta[g.root] for g in groups if g.root in delta),
+                        None)
+            if dest is None or not self._migrate_kv(req, dest):
+                self._preempt(req)
+        for i in gone_idx:
+            arena = self._arenas.pop(i, None)
+            # whatever still sits there (direct-seated test requests)
+            # is preempted with the bin
+            if arena is not None:
+                for rid in list(arena.tables):
+                    req = next((r for r in self._slots
+                                if r is not None and r.id == rid), None)
+                    if req is not None:
+                        self._preempt(req)
+
+    def _migrate_kv(self, req: Request, dest: int) -> bool:
+        """Move ``req``'s pages to bin ``dest``, charging the KV span's
+        transfer time; False when the destination cannot host them."""
+        src = self._home.get(req.id, min(self._sched_state.live))
+        if dest == src or dest not in self._arenas:
+            return dest == src
+        need = req.total_tokens + max(
+            0, req.max_new_tokens - len(req.generated))
+        if not self._arenas[dest].can_admit(max(1, need)):
+            return False
+        self._arenas[src].release(req.id)
+        self._arenas[dest].admit(
+            req.id, req.total_tokens,
+            reserve_tokens=max(0, req.max_new_tokens - len(req.generated)))
+        state = self._sched_state
+        self.kv_moves += 1
+        self.kv_move_seconds += self.cost_model.transfer_time(
+            req.total_tokens * self.kv_bytes_per_token,
+            state.bins[src], state.bins[dest])
+        self._home[req.id] = dest
+        return True
+
+    def _request_groups(self, req: Request) -> tuple[TaskGroup, TaskGroup]:
+        """Append ``req``'s mini-trace (pull→prefill→decode, own pulls ⇒
+        two affinity groups) to the engine graph and return the
+        (prefill, decode) groups."""
+        G = self._trace
+        mark = len(G.nodes)
+        kv_span = max(1, len(req.prompt)) * self.kv_bytes_per_token
+        p = G.pull(np.zeros(1, np.float32), size=kv_span,
+                   name=f"pull_prefill{req.id}")
+        k = G.kernel(lambda *a: 0.0, p,
+                     cost=_PREFILL_COST_PER_TOKEN * max(1, len(req.prompt)),
+                     name=f"prefill{req.id}")
+        k.succeed(p)
+        p2 = G.pull(np.zeros(1, np.float32), size=1024,
+                    name=f"pull_decode{req.id}")
+        k2 = G.kernel(lambda *a: 0.0, p2, k,
+                      cost=_DECODE_COST_PER_TOKEN * max(1, req.max_new_tokens),
+                      name=f"decode{req.id}")
+        k2.succeed(p2, k)
+        new = [g for g in build_groups(G)
+               if min(n.id for n in g.nodes) >= mark]
+        pre = next(g for g in new
+                   if any(n.name == f"prefill{req.id}" for n in g.nodes))
+        dec = next(g for g in new
+                   if any(n.name == f"decode{req.id}" for n in g.nodes))
+        return pre, dec
+
+    def _place(self, req: Request) -> tuple[tuple[TaskGroup, ...], int, int]:
+        """One SchedulerUpdate per admission: place the request's
+        prefill + decode groups, cached so a stalled admission does not
+        re-place (and double-account) on retry."""
+        if req.id in self._placed:
+            return self._placed[req.id]
+        pre, dec = self._request_groups(req)
+        delta = self.scheduler.update(
+            self._sched_state, SchedulerUpdate(new_tasks=(pre, dec)))
+        live = sorted(self._sched_state.live)
+        home = delta.get(pre.root, live[0])
+        dbin = delta.get(dec.root, home)
+        self._placed[req.id] = ((pre, dec), home, dbin)
+        return self._placed[req.id]
+
     def _tick(self) -> bool:
         """One engine iteration: admit → prefill news → decode actives."""
         self.ticks += 1
-        # 1. admission (arena-gated)
+        self._apply_bin_events()
+        # 1. admission (scheduler-placed, arena-gated)
         with self._lock:
             stalled = False
             for i in range(self.max_slots):
@@ -137,17 +396,29 @@ class ServingEngine:
                     nxt = self._queue[0]
                     need = len(nxt.prompt) + nxt.max_new_tokens
                     if need > self.max_seq:
-                        nxt.done = True          # reject oversize
-                        self._queue.popleft()
+                        nxt._advance(state=DONE, finished_s=self._clock())
+                        self._queue.popleft()     # reject oversize
                         self.completed.append(nxt)
                         continue
-                    if not self.arena.can_admit(need):
-                        stalled = True           # wait for pages to free
-                        break
+                    groups, home, dbin = self._place(nxt)
+                    if not self._arenas[home].can_admit(need):
+                        # KV-locality override: seat on any bin with
+                        # room rather than head-of-line block the queue
+                        fit = [b for b in sorted(self._sched_state.live)
+                               if self._arenas[b].can_admit(need)]
+                        if not fit:
+                            stalled = True        # wait for pages to free
+                            break
+                        home = fit[0]
+                        self._placed[nxt.id] = (groups, home, dbin)
                     req = self._queue.popleft()
-                    self.arena.admit(req.id, len(req.prompt),
-                                     reserve_tokens=req.max_new_tokens)
+                    self._arenas[home].admit(req.id, len(req.prompt),
+                                             reserve_tokens=req.max_new_tokens)
+                    self._home[req.id] = home
                     self._slots[i] = req
+                    self._req_groups[req.id] = groups
+                    del self._placed[req.id]
+                    req._advance(state=PREFILL)
                     # prefill this slot
                     tokens = jnp.asarray(req.prompt[None, :])
                     self._caches[i] = transformer.init_cache(
@@ -155,7 +426,17 @@ class ServingEngine:
                     logits, self._caches[i] = self._prefill(
                         self.params, tokens, self._caches[i])
                     req.generated.append(int(jnp.argmax(logits[0])))
-                    self.arena.extend(req.id)
+                    now = self._clock()
+                    if req.first_token_s is None:
+                        self._ttft.append(now - req.arrival_s)
+                        req._advance(first_token_s=now)
+                    self._last_token_s[req.id] = now
+                    req._advance(state=DECODING)
+                    self._arenas[home].extend(req.id)
+                    # decode placed off the KV home: migrate the pages
+                    # (charged) so decode runs where its cache lives
+                    if dbin != home:
+                        self._migrate_kv(req, dbin)
 
         # 2. decode step for all active slots
         active = [(i, r) for i, r in enumerate(self._slots) if r is not None]
@@ -169,6 +450,11 @@ class ServingEngine:
             logits, self._caches[i] = self._decode(
                 self.params, tok, self._caches[i])
             req.generated.append(int(jnp.argmax(logits[0])))
+            now = self._clock()
+            last = self._last_token_s.get(req.id)
+            if last is not None:
+                self._itl.append(now - last)
+            self._last_token_s[req.id] = now
             if not self._grow(req):
                 continue                          # req went back to queue
             if len(req.generated) >= req.max_new_tokens:
@@ -176,53 +462,104 @@ class ServingEngine:
         return self._has_work()
 
     def _grow(self, req: Request) -> bool:
-        """Extend ``req``'s page run, preempting the youngest active
-        request on grow-OOM (module docstring: grow/preempt rule).
-        Returns False when ``req`` itself was the preemption victim."""
+        """Extend ``req``'s page run, preempting the youngest *other*
+        request on the same arena on grow-OOM (module docstring:
+        grow/preempt rule).  Only when no other victim exists does the
+        grower give up its own seat — preferring self-preemption
+        whenever the grower happened to be youngest livelocked the
+        engine (evict self → re-seat → re-grow → evict self …).
+        Returns False when ``req`` itself had to be preempted."""
         while True:
             try:
-                self.arena.extend(req.id)
+                self._arena_of(req).extend(req.id)
                 return True
             except OutOfMemory:
-                victim = self._preempt_youngest()
-                if victim is None or victim is req:
+                victim = self._preempt_youngest(
+                    exclude=req, bin_idx=self._home.get(req.id))
+                if victim is None:
+                    self._preempt(req)            # last resort: own seat
                     return False
 
-    def _preempt_youngest(self) -> Request | None:
+    def _preempt_youngest(self, exclude: Request | None = None,
+                          bin_idx: int | None = None) -> Request | None:
         """Kick the youngest (highest id) active request back to the
-        queue head: release its pages and reset its generated tokens —
-        greedy decoding recomputes them identically on re-admission."""
+        queue head — ``exclude`` is never chosen, and ``bin_idx``
+        restricts victims to one arena (evicting pages elsewhere cannot
+        unblock a grow on this one)."""
         with self._lock:
-            seated = [(r.id, i) for i, r in enumerate(self._slots)
-                      if r is not None]
+            default = min(self._sched_state.live)
+            seated = [
+                (r.id, i) for i, r in enumerate(self._slots)
+                if r is not None and r is not exclude
+                and (bin_idx is None
+                     or self._home.get(r.id, default) == bin_idx)]
             if not seated:
                 return None
             _, slot = max(seated)
-            victim = self._slots[slot]
-            self.arena.release(victim.id)
+        victim = self._slots[slot]
+        self._preempt(victim)
+        return victim
+
+    def _preempt(self, victim: Request) -> None:
+        """Release ``victim``'s pages and reset its generated tokens —
+        greedy decoding recomputes them identically on re-admission."""
+        with self._lock:
+            arena = self._arena_of(victim)
+            if victim.id in arena.tables:
+                arena.release(victim.id)
+            self._home.pop(victim.id, None)
+            self._last_token_s.pop(victim.id, None)
             victim.generated.clear()
-            self._slots[slot] = None
+            victim._advance(state=PREEMPTED)
+            for i, r in enumerate(self._slots):
+                if r is victim:
+                    self._slots[i] = None
+            self._finish_groups(victim)
             self._queue.appendleft(victim)
             self.preemptions += 1
-            return victim
+
+    def _finish_groups(self, req: Request) -> None:
+        """Release the request's groups from the scheduler's active-load
+        books (``new_finished_tasks``); re-admission files fresh ones."""
+        groups = self._req_groups.pop(req.id, ())
+        if groups:
+            self.scheduler.update(
+                self._sched_state,
+                SchedulerUpdate(new_finished_tasks=tuple(groups)))
 
     def _retire(self, slot: int) -> None:
         with self._lock:
             req = self._slots[slot]
-            req.done = True
-            self.arena.release(req.id)
+            req._advance(state=DONE, finished_s=self._clock())
+            self._arena_of(req).release(req.id)
+            self._home.pop(req.id, None)
+            self._last_token_s.pop(req.id, None)
+            self._finish_groups(req)
             self.completed.append(req)
             self._slots[slot] = None
 
     # -- stats --------------------------------------------------------------
     def stats(self) -> dict[str, Any]:
+        live = sorted(self._sched_state.live)
+        utils = [self._arenas[i].utilization for i in live
+                 if i in self._arenas]
+        frags = [self._arenas[i].fragmentation() for i in live
+                 if i in self._arenas]
         return {
             "ticks": self.ticks,
             "queue": len(self._queue),
             "active": sum(s is not None for s in self._slots),
             "completed": len(self.completed),
-            "kv_utilization": self.arena.utilization,
-            "kv_fragmentation": self.arena.fragmentation(),
-            "page_grows": self.arena.grows,
+            "bins": len(live),
+            "kv_utilization": sum(utils) / len(utils) if utils else 0.0,
+            "kv_fragmentation": sum(frags) / len(frags) if frags else 0.0,
+            "page_grows": sum(self._arenas[i].grows for i in live
+                              if i in self._arenas),
             "preemptions": self.preemptions,
+            "kv_moves": self.kv_moves,
+            "kv_move_seconds": self.kv_move_seconds,
+            "ttft_p50_s": percentile(self._ttft, 50) if self._ttft else 0.0,
+            "ttft_p99_s": percentile(self._ttft, 99) if self._ttft else 0.0,
+            "itl_p50_s": percentile(self._itl, 50) if self._itl else 0.0,
+            "itl_p99_s": percentile(self._itl, 99) if self._itl else 0.0,
         }

@@ -101,6 +101,12 @@ class PagedKVArena:
         pt = self.tables.pop(request_id)
         self._buddy.free(pt.offset)
 
+    def bytes_for(self, request_id: int) -> int:
+        """HBM bytes the request's page run pins (allocated, not just
+        used — the span a KV migration between bins must move)."""
+        pt = self.tables[request_id]
+        return pt.n_pages * self.page_bytes
+
     # -- capacity stats ---------------------------------------------------
     @property
     def pages_in_use(self) -> int:

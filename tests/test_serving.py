@@ -108,7 +108,7 @@ def test_grow_oom_preempts_youngest_and_requeues(rig):
                         page_tokens=16)
     r0 = Request(0, np.zeros(16, np.int32), 4)
     r1 = Request(1, np.zeros(16, np.int32), 4)
-    r1.generated = [7, 8]
+    r1.generated.extend([7, 8])
     eng._slots[0], eng._slots[1] = r0, r1
     eng.arena.admit(0, 16, reserve_tokens=0)
     eng.arena.admit(1, 16, reserve_tokens=0)
@@ -142,3 +142,121 @@ def test_grow_oom_with_no_other_victim_returns_false(rig):
     assert eng._grow(r0) is False
     assert eng._slots[0] is None and eng._queue[0] is r0
     assert eng.preemptions == 1                            # self-preempt
+
+
+def test_grow_oom_prefers_other_victim_over_self(rig):
+    """Livelock regression: when the GROWER is the youngest active
+    request, _grow must evict the other (older) request rather than
+    preempt itself — the old youngest-wins rule evicted the grower,
+    which then re-seated, re-grew, and re-evicted itself forever while
+    the older request's pages sat untouched."""
+    from repro.serving.engine import Request
+
+    cfg, params = rig
+    eng = ServingEngine(cfg, params, max_slots=2, max_seq=16,
+                        page_tokens=16)
+    r0 = Request(0, np.zeros(16, np.int32), 4)      # older
+    r1 = Request(1, np.zeros(16, np.int32), 4)      # younger = grower
+    eng._slots[0], eng._slots[1] = r0, r1
+    eng.arena.admit(0, 16, reserve_tokens=0)
+    eng.arena.admit(1, 16, reserve_tokens=0)
+    assert not eng.arena.can_admit(1)                      # full
+
+    assert eng._grow(r1) is True                    # r0 evicted, not r1
+    assert eng.preemptions == 1
+    assert eng._slots[0] is None and eng._slots[1] is r1
+    assert eng._queue[0] is r0 and 0 not in eng.arena.tables
+    assert eng.arena.tables[1].n_pages == 2                # grow landed
+
+
+def test_request_is_frozen_public_record(rig):
+    """Identity fields of the public Request are immutable; lifecycle
+    state is engine-advanced, and `done` reflects it."""
+    import dataclasses
+
+    from repro.serving import DONE, QUEUED, Request
+
+    r = Request(3, np.arange(4, dtype=np.int32), 8)
+    assert r.state == QUEUED and not r.done
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        r.max_new_tokens = 99
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        r.state = DONE
+    r.generated.extend([1, 2])                   # token list is mutable
+    assert r.total_tokens == 6
+
+
+def test_public_lifecycle_submit_poll_step(rig):
+    """submit()/poll()/step() drive a request queued → prefill →
+    decoding → done with TTFT/ITL recorded against the injected clock."""
+    from repro.serving import DECODING, DONE, QUEUED
+
+    cfg, params = rig
+    t = {"now": 100.0}
+    eng = ServingEngine(cfg, params, max_slots=1, max_seq=64,
+                        clock=lambda: t["now"])
+    rid = eng.submit(np.arange(5) % cfg.vocab_size, max_new_tokens=3)
+    assert eng.poll(rid).state == QUEUED
+    assert eng.poll(rid).arrival_s == 100.0
+    t["now"] = 100.5
+    assert eng.step() is True                    # admit + prefill + decode
+    req = eng.poll(rid)
+    assert req.state in (DECODING, DONE)
+    assert req.first_token_s == 100.5
+    while eng.step():
+        pass
+    req = eng.poll(rid)
+    assert req.state == DONE and req.done and len(req.generated) == 3
+    assert req.finished_s is not None
+    s = eng.stats()
+    assert s["ttft_p50_s"] == pytest.approx(0.5)
+    assert s["ttft_p99_s"] == pytest.approx(0.5)
+    assert eng.poll(12345) is None
+
+
+def test_multi_bin_kv_locality_and_moves(rig):
+    """With several KV bins, admission places each request's groups via
+    Scheduler.update(); a decode group landing off the prefill bin
+    migrates the pages and charges CostModel.transfer_time (kv_moves /
+    kv_move_seconds), and HEFT's transfer charging keeps decode
+    co-located (zero moves)."""
+    cfg, params = rig
+    prompts = [np.arange(8) % cfg.vocab_size for _ in range(4)]
+
+    heft = ServingEngine(cfg, params, max_slots=2, max_seq=64, bins=2)
+    for p in prompts:
+        heft.submit(p, max_new_tokens=2)
+    done = heft.run()
+    assert len(done) == 4 and all(r.done for r in done)
+    assert heft.stats()["bins"] == 2
+    assert heft.kv_moves == 0                    # decode follows its KV
+
+    bal = ServingEngine(cfg, params, max_slots=2, max_seq=64, bins=2,
+                        scheduler="balanced")
+    for p in prompts:
+        bal.submit(p, max_new_tokens=2)
+    done = bal.run()
+    assert len(done) == 4
+    # balanced ignores the prefill→decode edge, so the heavy decode
+    # group lands on the other bin and the KV span is moved (charged)
+    assert bal.kv_moves > 0
+    assert bal.stats()["kv_move_seconds"] > 0.0
+
+
+def test_engine_add_and_retire_bin(rig):
+    """add_bin()/retire_bin() feed SchedulerUpdate bin events at the
+    next tick: joins widen the pool, drains migrate or preempt the
+    drained bin's residents and drop its arena."""
+    cfg, params = rig
+    eng = ServingEngine(cfg, params, max_slots=2, max_seq=64, bins=1)
+    assert eng.stats()["bins"] == 1
+    eng.add_bin("kv1")
+    eng.submit(np.arange(6) % cfg.vocab_size, max_new_tokens=2)
+    eng.step()
+    assert eng.stats()["bins"] == 2
+    eng.retire_bin("kv1")
+    while eng.step():
+        pass
+    assert eng.stats()["bins"] == 1
+    assert eng.stats()["completed"] == 1
+    assert eng.arena.pages_in_use == 0
