@@ -96,6 +96,7 @@ from benchmarks.workloads import (
 from repro.configs import DEFAULT_SCHED
 from repro.core.streams import DEFAULT_LANE_DEPTH
 from repro.sched import (
+    ChaosPlan,
     CostModel,
     DeviceBin,
     HostBin,
@@ -363,6 +364,7 @@ def results_payload(args, results: dict[tuple[str, str], float],
         "collective_alpha": args.collective_alpha,
         "collective_beta": args.collective_beta,
         "memory_bytes": args.memory_bytes,
+        "chaos": args.chaos or "",
         "makespan_s": makespan_s,
         "mean_util": mean_util,
     }
@@ -391,6 +393,14 @@ def check_baseline(payload: dict, baseline: dict, *,
                 f"config mismatch on {knob!r}: baseline "
                 f"{baseline.get(knob, 0.0)!r} vs run "
                 f"{payload.get(knob, 0.0)!r}")
+    # the chaos study is additive (the sweep rows never see faults) but
+    # the knob is recorded, so a baseline refreshed under --chaos stays
+    # visibly distinct; absent means "" (off) for older baselines
+    if baseline.get("chaos", "") != payload.get("chaos", ""):
+        failures.append(
+            f"config mismatch on 'chaos': baseline "
+            f"{baseline.get('chaos', '')!r} vs run "
+            f"{payload.get('chaos', '')!r}")
     base_ms = baseline.get("makespan_s", {})
     cur_ms = payload.get("makespan_s", {})
     for shape, policies in sorted(base_ms.items()):
@@ -409,6 +419,85 @@ def check_baseline(payload: dict, baseline: dict, *,
                 f"(+{(cur / base - 1.0) * 100:.1f}% > {rtol * 100:.0f}% "
                 f"tolerance)")
     return failures
+
+
+def chaos_study(args, bins: list, shapes: list[str], policies: list[str],
+                model: CostModel) -> bool:
+    """Fault-injected twin study (``--chaos``): replay every plain-shape
+    cell under a seeded :class:`ChaosPlan` and gate graceful recovery.
+
+    Additive by construction — the main sweep's ``results`` (and every
+    baseline comparison built from them) is computed before this runs
+    and never touched; the study only prints its own ``chaos,...`` rows
+    plus two gate rows:
+
+    * ``chaos_completes_all_tasks`` — every faulted run still finishes
+      every task (the lost frontier was re-executed, not dropped);
+    * ``chaos_makespan_degrades_gracefully`` — the gated policy's
+      faulted makespan stays within 2x of a no-fault run on the
+      SURVIVING bins (scaled by the slowdown factor for slow specs).
+    """
+    ok = True
+    eligible = [s for s in shapes if s in SHAPES]
+    incomplete: list[str] = []
+    ungraceful: list[str] = []
+    cells = 0
+    n_reexec_total = 0
+    print("chaos,shape,policy,nofault_ms,faulted_ms,reexecuted,recovery_ms")
+    for shape in eligible:
+        for pol in policies:
+            G = ALL_SHAPES[shape]()
+            if pol == "random":
+                pl = RandomPolicy(seed=0).schedule(G, bins)
+            else:
+                kw = {"cost_model": model} if pol == "heft" else {}
+                pl = get_scheduler(pol, **kw).schedule(G, bins)
+            ref = simulate(G, pl, bins, cost_model=model,
+                           host_workers=args.host_workers)
+            plan = ChaosPlan.plan(args.chaos, n_tasks=len(G),
+                                  n_bins=len(bins), seed=0)
+            fs = plan.fault_schedule(G, pl, bins, cost_model=model,
+                                     host_workers=args.host_workers)
+            rep = simulate(G, pl, bins, cost_model=model,
+                           host_workers=args.host_workers, faults=fs)
+            cells += 1
+            n_reexec_total += rep.n_reexecuted
+            print(f"chaos,{shape},{pol},{ref.makespan * 1e3:.4f},"
+                  f"{rep.makespan * 1e3:.4f},{rep.n_reexecuted},"
+                  f"{rep.recovery_seconds * 1e3:.4f}", flush=True)
+            if len(rep.finish_times) != len(G):
+                incomplete.append(f"{shape}/{pol}")
+            if pol != GATED_POLICY:
+                continue
+            # graceful-degradation bound: the same policy, no faults,
+            # on the pool that survives the kills
+            killed = {e.bin for e in plan.events if e.action == "kill"}
+            survivors = [b for i, b in enumerate(bins) if i not in killed]
+            G2 = ALL_SHAPES[shape]()
+            pl2 = get_scheduler(GATED_POLICY,
+                                cost_model=model).schedule(G2, survivors)
+            ms_surv = simulate(G2, pl2, survivors, cost_model=model,
+                               host_workers=args.host_workers).makespan
+            slow = max((e.factor for e in plan.events
+                        if e.action == "slow"), default=1.0)
+            bound = 2.0 * max(slow, 1.0) * ms_surv
+            if rep.makespan > bound * (1 + 1e-9):
+                ungraceful.append(
+                    f"{shape}:faulted={rep.makespan * 1e3:.4f}ms,"
+                    f"bound={bound * 1e3:.4f}ms")
+    good = not incomplete
+    ok &= good
+    print(f"check,chaos_completes_all_tasks,{'PASS' if good else 'FAIL'},"
+          + (";".join(incomplete)
+             or f"cells={cells},reexecuted={n_reexec_total}"))
+    if GATED_POLICY in policies and eligible:
+        good = not ungraceful
+        ok &= good
+        print(f"check,chaos_makespan_degrades_gracefully,"
+              f"{'PASS' if good else 'FAIL'},"
+              + (";".join(ungraceful)
+                 or f"bound=2x_nofault_{GATED_POLICY}_on_survivors"))
+    return ok
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -460,6 +549,14 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--serving-batch", type=int, default=8,
                    help="batch size of the static-batching strawman in "
                         "the --arrival serving study")
+    p.add_argument("--chaos", metavar="SPEC",
+                   help="fault-injected twin study: kill:N (kill N "
+                        "seeded-random bins at task-count triggers, "
+                        "N < bin count) or slow:BIN:FACTOR (stretch one "
+                        "bin's service times mid-run); re-simulates every "
+                        "plain-shape cell under the faults and gates "
+                        "completion + graceful degradation; off by "
+                        "default (baseline rows are untouched either way)")
     p.add_argument("--measure", action="store_true",
                    help="also run every cell on the real executor, fit "
                         "a CostModel from its trace, and report measured "
@@ -493,6 +590,12 @@ def main(argv: list[str] | None = None) -> int:
         p.error(str(e))
     if args.memory_bytes:
         bins = budget_bins(bins, args.memory_bytes)
+    if args.chaos:
+        try:   # validate spec + victim bounds up front, not mid-study
+            ChaosPlan.plan(args.chaos, n_tasks=max(2, len(bins)),
+                           n_bins=len(bins), seed=0)
+        except ValueError as e:
+            p.error(str(e))
     mesh = has_mesh_bin(bins)
     staged = has_stage_bin(bins)
     if args.measure and (mesh or staged):
@@ -554,6 +657,10 @@ def main(argv: list[str] | None = None) -> int:
         except ValueError as e:
             p.error(str(e))
 
+    chaos_ok = True
+    if args.chaos:
+        chaos_ok = chaos_study(args, bins, shapes, policies, model)
+
     # baseline payloads keep the legacy integer bin count; mesh pools
     # record their spec string (config mismatch vs an int baseline is
     # exactly right — the sweeps are not comparable)
@@ -573,7 +680,7 @@ def main(argv: list[str] | None = None) -> int:
         baseline = {k: payload[k] for k in
                     ("version", "bins", "speeds", "host_workers",
                      "lane_depth", "collective_alpha", "collective_beta",
-                     "memory_bytes")}
+                     "memory_bytes", "chaos")}
         baseline["makespan_s"] = {
             shape: {GATED_POLICY: pols[GATED_POLICY]}
             for shape, pols in payload["makespan_s"].items()
@@ -583,7 +690,7 @@ def main(argv: list[str] | None = None) -> int:
         print(f"baseline,{args.write_baseline}")
         return 0
 
-    ok = serving_ok
+    ok = serving_ok and chaos_ok
     for shape in ("fanout", "diamond"):
         if ("heft" in policies and "random" in policies and shape in shapes):
             h, r = results[(shape, "heft")], results[(shape, "random")]
@@ -735,6 +842,11 @@ def main(argv: list[str] | None = None) -> int:
             mismatch += [k for k in ("collective_alpha", "collective_beta",
                                      "memory_bytes")
                          if base.get(k, 0.0) != payload.get(k, 0.0)]
+            # absent means "" (off): the chaos study never perturbs the
+            # sweep rows, but a baseline refreshed under --chaos should
+            # downgrade the exactness claim to a config WARN
+            mismatch += ["chaos"] if (base.get("chaos", "")
+                                      != payload.get("chaos", "")) else []
             if mismatch:
                 print(f"check,budgets_off_bit_identical,WARN,"
                       f"config mismatch on {mismatch}")

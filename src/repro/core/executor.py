@@ -57,6 +57,9 @@ class Topology:
         self.iteration = 0
         self._remaining = 0
         self._lock = threading.Lock()
+        # node ids whose _invoke completed this iteration — the ground
+        # truth bin-failure recovery computes the lost frontier from
+        self._executed: set[int] = set()
         self.failed: BaseException | None = None
 
     def _arm(self) -> list[Node]:
@@ -69,6 +72,7 @@ class Topology:
                 sources.append(n)
         with self._lock:
             self._remaining = len(self.graph.nodes)
+            self._executed.clear()
         return sources
 
     def _node_done(self) -> bool:
@@ -152,6 +156,17 @@ class Executor:
         many hottest task groups off overloaded bins instead of fully
         repacking — near-equal loads then keep the placement untouched
         (no churn), trading global optimality for warm device state.
+    chaos: optional ``repro.sched.ChaosPlan``; its task-count triggers
+        fire :meth:`fail_bin` / :meth:`slow_bin` as tasks complete —
+        deterministic fault injection for the chaos test net.
+    straggler_threshold: if > 0, online straggler detection is on: a
+        per-bin EWMA of observed-vs-predicted kernel duration
+        (``repro.sched.StragglerDetector``) flags bins slower than
+        ``threshold``× the healthiest; at the next iteration boundary
+        the live ``CostModel`` of a model-carrying policy (HEFT) is
+        demoted to the observed speed and a re-placement window runs
+        (the ``migrate_top_k`` path when configured).
+    straggler_alpha: EWMA smoothing factor for the detector.
     """
 
     def __init__(
@@ -166,6 +181,9 @@ class Executor:
         steal_locality: bool = True,
         replace_every: int = 0,
         migrate_top_k: int = 0,
+        chaos: Any = None,
+        straggler_threshold: float = 0.0,
+        straggler_alpha: float = 0.4,
     ):
         from ..sched import get_scheduler  # lazy: sched imports core
         if num_workers is None:
@@ -199,6 +217,7 @@ class Executor:
         # the budget), even without a global arena_bytes.  Unbudgeted
         # bins keep the legacy arena_bytes-or-nothing rule.
         self.arenas = {}
+        self._arena_bytes = arena_bytes   # reused when bins join later
         for d in self.devices:
             cap = self._arena_capacity(d, arena_bytes)
             if cap:
@@ -212,6 +231,35 @@ class Executor:
         self._refills = 0
         self._spilled_bytes = 0
         self._refilled_bytes = 0
+
+        # bin-event stream state (fail / retire / slowdown / join):
+        # dead slots stay in self.devices so indices and labels remain
+        # stable, but every placement path skips them
+        self._dead_bins: set[int] = set()
+        self._recovery_lock = threading.RLock()
+        self._slowdown: dict[str, float] = {}
+        self._bin_failures = 0
+        self._bin_retirements = 0
+        self._reexecuted = 0
+        self._straggler_demotions = 0
+        # chaos fault injection (sched.chaos.ChaosPlan): one runner per
+        # executor — its task-count triggers fire exactly once
+        self._chaos = chaos
+        self._chaos_runner = chaos.runner() if chaos is not None else None
+        self._chaos_counter = itertools.count(1)
+        # online straggler detection: EWMA of observed-vs-predicted
+        # kernel duration per bin (sched.chaos.StragglerDetector);
+        # 0 = off.  Predictions use a reference CostModel at uniform
+        # speed — the detector judges bins relatively, so a uniform
+        # scale error cancels out.
+        self._straggler = None
+        self._straggler_model = None
+        if straggler_threshold:
+            from ..sched.chaos import StragglerDetector
+            from ..sched.simulator import CostModel
+            self._straggler = StragglerDetector(
+                alpha=straggler_alpha, threshold=straggler_threshold)
+            self._straggler_model = CostModel(cost_fn=cost_fn)
 
         self._workers = [_Worker(i) for i in range(num_workers)]
         for w in self._workers:
@@ -227,7 +275,7 @@ class Executor:
         self._thieves = 0
         self._stop = False
 
-        self._topologies: set[int] = set()
+        self._topologies: dict[int, Topology] = {}
         self._topo_cv = threading.Condition()
 
         self._local = threading.local()
@@ -282,10 +330,14 @@ class Executor:
             topo.future.set_result(0)
             return topo.future
         # device placement before execution (Algorithm 1 by default; any
-        # repro.sched policy via the ``scheduler`` constructor knob)
+        # repro.sched policy via the ``scheduler`` constructor knob) —
+        # over the LIVE bins only: failed/retired slots take no new work
+        live = self._live_devices()
+        if not live:
+            raise ValueError("no live device bins left to place onto")
         initial = {d: a.bytes_in_use for d, a in
-                   ((dd, self.arenas.get(id(dd))) for dd in self.devices) if a}
-        self.scheduler.schedule(graph, self.devices, self._cost_fn,
+                   ((dd, self.arenas.get(id(dd))) for dd in live) if a}
+        self.scheduler.schedule(graph, live, self._cost_fn,
                                 initial_load=initial or None)
         if self._replace_every:
             # re-placement windows start NOW — don't let a previous run's
@@ -293,7 +345,7 @@ class Executor:
             with self._busy_lock:
                 self._busy_snapshot = self._merged_bin_busy()
         with self._topo_cv:
-            self._topologies.add(topo.id)
+            self._topologies[topo.id] = topo
         sources = topo._arm()
         self._bulk_enqueue(sources)
         return topo.future
@@ -369,6 +421,13 @@ class Executor:
             "steal_locality": self._steal_locality,
             "executed": sum(w.executed for w in self._workers),
             "replacements": self._replacements,
+            # bin-event stream (fail / retire / slowdown / straggler)
+            "bin_failures": self._bin_failures,
+            "bin_retirements": self._bin_retirements,
+            "reexecuted": self._reexecuted,
+            "straggler_demotions": self._straggler_demotions,
+            "dead_bins": sorted(self.device_labels[i]
+                                for i in self._dead_bins),
             "bin_busy_s": self._merged_bin_busy(),
             # arena memory pressure (spill-to-host path): eviction /
             # refill round trips and per-bin high-water bytes — peaks
@@ -398,6 +457,271 @@ class Executor:
         if not busy:
             return []
         return [w.id for w in self._workers if now - w.last_beat > threshold_s]
+
+    # ------------------------------------------------------------------
+    # bin-event stream: join / retire / fail / slowdown
+    # ------------------------------------------------------------------
+    def _live_devices(self) -> list[Any]:
+        return [d for i, d in enumerate(self.devices)
+                if i not in self._dead_bins]
+
+    def _bin_slot(self, b: Any) -> int:
+        """Resolve a bin reference — slot index, device object (by
+        identity), or ``device_labels`` entry — to its slot index."""
+        if isinstance(b, int):
+            if not 0 <= b < len(self.devices):
+                raise ValueError(
+                    f"bin index {b} out of range 0..{len(self.devices) - 1}")
+            return b
+        for i, d in enumerate(self.devices):
+            if d is b:
+                return i
+        if b in self.device_labels:
+            return self.device_labels.index(b)
+        for i, d in enumerate(self.devices):
+            if d == b:
+                return i
+        raise ValueError(f"unknown bin {b!r}")
+
+    def _check_not_last(self, idx: int, verb: str) -> str:
+        label = self.device_labels[idx]
+        if idx in self._dead_bins:
+            raise ValueError(f"bin {label!r} is already dead/retired")
+        if len(self.devices) - len(self._dead_bins) <= 1:
+            raise ValueError(
+                f"cannot {verb} bin {label!r}: it is the last live bin — "
+                f"no survivor to take its work")
+        return label
+
+    def join_bin(self, b: Any) -> int:
+        """Append a new execution bin to the pool; returns its slot.
+
+        Takes effect at the next placement decision — a new run, a
+        re-placement window, or the displaced-group re-placement of a
+        later fail/retire.  Work already placed does not move eagerly.
+        """
+        with self._recovery_lock:
+            self.devices.append(b)
+            self.device_labels = bin_labels(self.devices)
+            cap = self._arena_capacity(b, self._arena_bytes)
+            if cap:
+                self.arenas[id(b)] = DeviceArena(
+                    b, cap, min_block=min(4096, cap))
+            for w in self._workers:
+                # atomic dict swap: _merged_bin_busy iterates concurrently
+                w.bin_busy = {label: w.bin_busy.get(label, 0.0)
+                              for label in self.device_labels}
+            return len(self.devices) - 1
+
+    def slow_bin(self, b: Any, factor: float) -> None:
+        """Inject a slowdown: future tasks on bin ``b`` take ``factor``×
+        as long (sleep padding in ``_invoke``; compounds on repeat).
+        The straggler detector observes the padded durations, so the
+        EWMA-demotion loop is exercisable deterministically."""
+        if factor <= 0:
+            raise ValueError(f"slowdown factor must be > 0, got {factor!r}")
+        with self._recovery_lock:
+            idx = self._bin_slot(b)
+            label = self.device_labels[idx]
+            if idx in self._dead_bins:
+                raise ValueError(f"bin {label!r} is dead/retired")
+            self._slowdown[label] = self._slowdown.get(label, 1.0) * factor
+
+    def retire_bin(self, b: Any) -> None:
+        """Gracefully retire bin ``b``: drain and migrate.
+
+        Unfinished groups placed there are re-placed through
+        ``Scheduler.update(retired_bins=...)``; already-produced pull
+        buffers resident on the bin are demoted to a host copy and
+        marked spilled, so the next consumer refills them onto the new
+        bin — the spill-to-host machinery doubles as the migration
+        path.  Results stay readable throughout (a graceful retire
+        loses no data).  Retiring the last live bin raises ValueError.
+        """
+        with self._recovery_lock:
+            idx = self._bin_slot(b)
+            label = self._check_not_last(idx, "retire")
+            with self._topo_cv:
+                topos = list(self._topologies.values())
+            for topo in topos:
+                old_device = self._retire_placement(topo, idx)
+                with topo._lock:
+                    executed = set(topo._executed)
+                for n in topo.graph.nodes:
+                    if (n.id not in executed or n.type != TaskType.PULL
+                            or n.device is old_device[n.id]):
+                        continue
+                    buf = n.state.get("device_data")
+                    if buf is None:
+                        continue
+                    if not isinstance(buf, np.ndarray):
+                        n.state["device_data"] = np.asarray(
+                            jax.device_get(buf))
+                    n.state["spilled"] = True
+            self._dead_bins.add(idx)
+            self._slowdown.pop(label, None)
+            self._bin_retirements += 1
+
+    def fail_bin(self, b: Any) -> None:
+        """Simulate the abrupt death of bin ``b`` and recover.
+
+        The bin is marked dead, results produced there that an
+        unexecuted task still needs are invalidated (the *lost
+        frontier*, closed upward over dead-bin producer chains), and the
+        lost tasks are re-enqueued after re-placement through
+        ``Scheduler.update(retired_bins=...)``.
+
+        Recovery keeps stale outputs while the frontier re-executes:
+        tasks are pure, so a consumer racing ahead on the stale value
+        reads bits identical to the re-executed one.  Unlike the
+        simulator's true-abort model, in-flight tasks on the dead bin
+        finish anyway (a thread cannot be aborted) and count as
+        survivors.  Killing the last live bin raises ValueError here,
+        before any policy runs.
+        """
+        with self._recovery_lock:
+            idx = self._bin_slot(b)
+            label = self._check_not_last(idx, "fail")
+            with self._topo_cv:
+                topos = list(self._topologies.values())
+            for topo in topos:
+                self._recover(topo, idx)
+            self._dead_bins.add(idx)
+            self._slowdown.pop(label, None)
+            self._bin_failures += 1
+
+    def _retire_placement(self, topo: Topology, idx: int) -> dict[int, Any]:
+        """Re-place every group resident on bin ``idx`` through the
+        event-driven ``Scheduler.update(retired_bins=...)`` path;
+        returns the pre-move ``{node.id: device}`` map.
+
+        Every dead-bin group is displaced — including fully-executed
+        ones whose results are fully consumed — so repeating topologies
+        never re-arm onto a dead bin."""
+        from repro.sched.base import (SchedulerState, SchedulerUpdate,
+                                      apply_assignment, build_groups)
+        graph = topo.graph
+        groups = build_groups(graph, self._cost_fn)
+        slot = {id(d): i for i, d in enumerate(self.devices)}
+        state = SchedulerState(self.devices)
+        for i in self._dead_bins:
+            state.live.discard(i)
+        for g in groups:
+            state.add_group(g)
+            gi = slot.get(id(g.nodes[0].device))
+            state.record(g, gi if gi is not None else idx)
+        old_device = {n.id: n.device for n in graph.nodes}
+        self.scheduler.update(state, SchedulerUpdate(retired_bins=(idx,)),
+                              graph=graph)
+        apply_assignment(graph, groups, self.devices, state.assignment)
+        self._free_moved_blocks(graph, old_device)
+        return old_device
+
+    def _recover(self, topo: Topology, idx: int) -> None:
+        """Lost-frontier recovery for one topology after bin ``idx``
+        fails: find executed dead-bin kernels/pulls whose result an
+        unexecuted task still needs (fixpoint — a lost result makes its
+        dead-bin producers lost too), re-place, then re-enqueue."""
+        graph = topo.graph
+        slot = {id(d): i for i, d in enumerate(self.devices)}
+        with topo._lock:
+            executed = set(topo._executed)
+        # only IDEMPOTENT tasks may re-execute: a kernel with declared
+        # ``writes`` has already rebound its pulls (re-running it would
+        # read its own output), and re-pulling a written pull would
+        # clobber the write with the raw source.  In the simulated-kill
+        # model their buffers survive physically, so keeping the stale
+        # (bit-correct) values IS the recovery for those nodes.
+        written = set()
+        for n in graph.nodes:
+            if (n.type == TaskType.KERNEL and n.id in executed
+                    and n.state.get("writes")):
+                for pt in n.state["writes"]:
+                    written.add(pt._node.id)
+
+        def reexecutable(n: Node) -> bool:
+            if n.type == TaskType.KERNEL:
+                return not n.state.get("writes")
+            return n.type == TaskType.PULL and n.id not in written
+
+        needs = {n.id for n in graph.nodes if n.id not in executed}
+        lost: list[Node] = []
+        lost_ids: set[int] = set()
+        changed = True
+        while changed:
+            changed = False
+            for n in graph.nodes:
+                if (n.id in executed and n.id not in lost_ids
+                        and slot.get(id(n.device)) == idx
+                        and reexecutable(n)
+                        and any(s.id in needs for s in n.successors)):
+                    lost.append(n)
+                    lost_ids.add(n.id)
+                    needs.add(n.id)
+                    changed = True
+        lost.sort(key=lambda n: n.id)
+        self._retire_placement(topo, idx)
+        if not lost:
+            return
+        # counter surgery under the topology lock: each lost node is
+        # live again (one more _finish_node to come), and successors
+        # still waiting owe one more join count.  Successors already at
+        # zero (enqueued or running) are left alone — they read the
+        # stale value, bit-identical for pure tasks.
+        with topo._lock:
+            if topo._remaining <= 0:
+                return             # iteration drained concurrently
+            topo._remaining += len(lost)
+            for n in lost:
+                topo._executed.discard(n.id)
+                for s in n.successors:
+                    if s.join_counter > 0:
+                        s.join_counter += 1
+        self._reexecuted += len(lost)
+        self._bulk_enqueue(lost)
+
+    def _demote_stragglers(self, topo: Topology) -> None:
+        """Fold detected slowdowns into the live ``CostModel`` (for
+        policies that carry one — HEFT) and trigger a re-placement
+        window so hot work migrates off the straggler (the
+        ``migrate_top_k`` path when configured).  Runs quiesced at the
+        iteration boundary, same safety argument as ``_replace``."""
+        from ..sched.chaos import StragglerDetector, demoted_model
+        model = getattr(self.scheduler, "cost_model", None)
+        if model is not None:
+            self.scheduler.cost_model = demoted_model(
+                model, self.devices, self._straggler)
+        self._straggler_demotions += 1
+        # fresh observation window: a demotion acts on the evidence,
+        # stale ratios must not re-trigger forever
+        det = self._straggler
+        self._straggler = StragglerDetector(
+            alpha=det.alpha, threshold=det.threshold,
+            min_samples=det.min_samples)
+        self._replace(topo)
+
+    def _poll_chaos(self) -> None:
+        """Worker-loop hook: fire any chaos triggers reached by the
+        executor-wide completed-task count.  A fault injected by a bad
+        plan (e.g. killing the last bin) routes into the running
+        topologies' futures instead of killing the worker thread."""
+        n_done = next(self._chaos_counter)
+        with self._recovery_lock:
+            fired = self._chaos_runner.due(n_done)
+            if not fired:
+                return
+            try:
+                for ev in fired:
+                    if ev.action == "kill":
+                        self.fail_bin(ev.bin)
+                    else:
+                        self.slow_bin(ev.bin, ev.factor)
+            except BaseException as e:  # noqa: BLE001
+                with self._topo_cv:
+                    topos = list(self._topologies.values())
+                for topo in topos:
+                    if topo.failed is None:
+                        topo.failed = e
 
     # ------------------------------------------------------------------
     # scheduling internals
@@ -471,6 +795,8 @@ class Executor:
                     self._actives -= 1
             w.executed += 1
             w.last_beat = time.monotonic()
+            if self._chaos_runner:
+                self._poll_chaos()
 
     def _wait_for_task(self, w: _Worker) -> Node | None:
         """Adaptive thief loop (paper §III-C): steal; if the queue world is
@@ -511,6 +837,14 @@ class Executor:
                 handler(self, w, node)
             except BaseException as e:  # noqa: BLE001 — propagate via future
                 topo.failed = e
+            # injected straggling (slow_bin / chaos slow events): stretch
+            # the task by the bin's slowdown factor so telemetry — and
+            # the straggler detector reading it — sees a genuinely slow
+            # bin, closing the loop the demotion tests exercise
+            if self._slowdown and node.bin_key is not None:
+                sl = self._slowdown.get(node.bin_key)
+                if sl is not None and sl > 1.0:
+                    time.sleep((sl - 1.0) * (time.perf_counter() - start))
             end = time.perf_counter()
             # telemetry must not kill the worker: a raising cost_fn or
             # profiler routes into topo.failed like any task exception,
@@ -520,6 +854,13 @@ class Executor:
                     w.last_bin = node.bin_key
                     if node.bin_key in w.bin_busy:  # fixed key set
                         w.bin_busy[node.bin_key] += end - start
+                if (self._straggler is not None and topo.failed is None
+                        and node.type == TaskType.KERNEL
+                        and node.bin_key is not None):
+                    self._straggler.observe(
+                        node.bin_key,
+                        self._straggler_model.node_time(node),
+                        end - start)
                 if self._profiler is not None:
                     self._profiler.record(node, worker=w.id,
                                           iteration=topo.iteration,
@@ -744,6 +1085,8 @@ class Executor:
     # ------------------------------------------------------------------
     def _finish_node(self, node: Node) -> None:
         topo: Topology = node.topology
+        with topo._lock:
+            topo._executed.add(node.id)
         # successors are enqueued even after a failure: _invoke skips
         # their handlers (topo.failed guard) but they must still drain the
         # remaining-counter or the topology future never resolves
@@ -768,6 +1111,13 @@ class Executor:
                 stop = True
         else:
             stop = True
+        if not stop and self._straggler is not None:
+            try:
+                if self._straggler.stragglers():
+                    self._demote_stragglers(topo)
+            except BaseException as e:  # noqa: BLE001 — propagate via future
+                topo.failed = e
+                stop = True
         if (not stop and self._replace_every
                 and topo.iteration % self._replace_every == 0):
             try:
@@ -787,7 +1137,7 @@ class Executor:
                 if topo.failed is None:
                     topo.failed = e
         with self._topo_cv:
-            self._topologies.discard(topo.id)
+            self._topologies.pop(topo.id, None)
             self._topo_cv.notify_all()
         if topo.failed is not None:
             topo.future.set_exception(topo.failed)
@@ -819,8 +1169,7 @@ class Executor:
         # and erase exactly the per-slot imbalance this measures
         measured = {i: window.get(label, 0.0)
                     for i, label in enumerate(self.device_labels)}
-        if self.arenas:
-            old_device = {n.id: n.device for n in topo.graph.nodes}
+        old_device = {n.id: n.device for n in topo.graph.nodes}
         # a reschedule is an update with measured-load state and no new
         # tasks (sched.base.Scheduler.update): migrate when configured,
         # full repack otherwise, then write the placement back
@@ -829,6 +1178,8 @@ class Executor:
         groups = build_groups(topo.graph, self._cost_fn)
         sched_state = SchedulerState(self.devices,
                                      migrate_top_k=self._migrate_top_k)
+        for i in self._dead_bins:       # failed/retired slots take no work
+            sched_state.live.discard(i)
         for g in groups:
             sched_state.add_group(g)
         sched_state.measured_load = measured
@@ -836,21 +1187,26 @@ class Executor:
                               graph=topo.graph)
         apply_assignment(topo.graph, groups, self.devices,
                          sched_state.assignment)
-        if self.arenas:
-            # a moved pull's arena block belongs to the *old* device; free
-            # it so occupancy stays honest and the next pull on the new
-            # bin re-allocates there (the "arena_off" guard in
-            # _invoke_pull only allocates when the key is absent)
-            for n in topo.graph.nodes:
-                off = n.state.get("arena_off")
-                if off is None or n.device is old_device[n.id]:
-                    continue
-                arena = self.arenas.get(id(old_device[n.id]))
-                if arena is not None:
-                    arena.free(off)
-                del n.state["arena_off"]
-                with self._mem_lock:
-                    residents = self._resident.get(id(old_device[n.id]))
-                    if residents is not None:
-                        residents.pop(n.id, None)
+        self._free_moved_blocks(topo.graph, old_device)
         self._replacements += 1
+
+    def _free_moved_blocks(self, graph: Heteroflow,
+                           old_device: dict[int, Any]) -> None:
+        """A moved pull's arena block belongs to the *old* device; free
+        it so occupancy stays honest and the next pull on the new bin
+        re-allocates there (the "arena_off" guard in ``_invoke_pull``
+        only allocates when the key is absent)."""
+        if not self.arenas:
+            return
+        for n in graph.nodes:
+            off = n.state.get("arena_off")
+            if off is None or n.device is old_device[n.id]:
+                continue
+            arena = self.arenas.get(id(old_device[n.id]))
+            if arena is not None:
+                arena.free(off)
+            del n.state["arena_off"]
+            with self._mem_lock:
+                residents = self._resident.get(id(old_device[n.id]))
+                if residents is not None:
+                    residents.pop(n.id, None)

@@ -55,6 +55,15 @@ traces through the update loop (``online_report``) and scores them
 against the ``static_batching_latency`` strawman.  The old
 ``reschedule()`` / ``migrate_top_k=`` entry points are deprecated
 shims over ``update()`` (see docs/scheduling.md "Online scheduling").
+
+Failure tolerance (PR 8): ``simulate(..., faults=FaultSchedule.kill(t,
+bin))`` injects kill/slow/join events at simulated times with honest
+re-execution charging (``SimReport.n_reexecuted`` /
+``recovery_seconds``); ``sched.chaos`` adds the deterministic
+:class:`ChaosPlan` harness (task-count triggers shared by
+``Executor(chaos=...)`` and the simulator) and the
+:class:`StragglerDetector` EWMA → :func:`demoted_model` loop.  See
+docs/scheduling.md "Failure tolerance and chaos testing".
 """
 from .base import (
     Scheduler,
@@ -90,6 +99,14 @@ from .online import (
     percentile,
     static_batching_latency,
 )
+from .chaos import (
+    ChaosEvent,
+    ChaosPlan,
+    ChaosRunner,
+    StragglerDetector,
+    demoted_model,
+    parse_chaos,
+)
 from .policies import BalancedBins, Heft, RandomPolicy, RoundRobin
 from .profile import (
     TaskProfiler,
@@ -102,6 +119,8 @@ from .profile import (
 from .simulator import (
     ArrivalProcess,
     CostModel,
+    FaultEvent,
+    FaultSchedule,
     SimReport,
     poisson,
     simulate,
@@ -120,6 +139,9 @@ __all__ = [
     "BalancedBins", "Heft", "RoundRobin", "RandomPolicy",
     "CostModel", "SimReport", "simulate",
     "ArrivalProcess", "poisson", "weak_components",
+    "FaultEvent", "FaultSchedule",
+    "ChaosEvent", "ChaosPlan", "ChaosRunner",
+    "StragglerDetector", "demoted_model", "parse_chaos",
     "online_placement", "online_report", "percentile",
     "static_batching_latency",
     "TaskProfiler", "TaskRecord", "load_trace", "node_bytes",

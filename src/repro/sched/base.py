@@ -264,6 +264,15 @@ class SchedulerState:
                      and r not in self.finished]
         for g in displaced:
             del self.assignment[g.root]
+            # the displaced work leaves the slot with the bin: release
+            # its live-load and packed-bytes books here, so re-placement
+            # (record on the new bin) doesn't double-count it.  The
+            # cumulative ``load`` book intentionally keeps history —
+            # chunked-update parity depends on it never decrementing.
+            scale = _group_scale(g, self.bins[idx])
+            self.active_load[idx] = max(
+                0.0, self.active_load[idx] - g.cost / scale)
+            self.packed[idx] = max(0, self.packed[idx] - g.bytes)
         return displaced
 
     def mark_finished(self, g: "TaskGroup | Hashable") -> None:

@@ -55,13 +55,14 @@ from repro.core.graph import Heteroflow, Node, TaskType
 from repro.core.placement import _nbytes, estimate_node_cost
 from repro.core.streams import COMPUTE_LANE, COPY_LANE, DEFAULT_LANE_DEPTH
 
-from .base import node_footprint
+from .base import (SchedulerState, SchedulerUpdate, bin_index, build_groups,
+                   get_scheduler, node_footprint)
 from .bins import (bin_compute_scale, bin_lane_width, bin_memory_bytes,
                    mesh_wide, stage_link)
 from .profile import producer_bytes
 
-__all__ = ["ArrivalProcess", "CostModel", "SimReport", "poisson", "simulate",
-           "weak_components"]
+__all__ = ["ArrivalProcess", "CostModel", "FaultEvent", "FaultSchedule",
+           "SimReport", "poisson", "simulate", "weak_components"]
 
 
 @dataclass(frozen=True)
@@ -83,6 +84,72 @@ class ArrivalProcess:
             t += rng.expovariate(self.rate)
             out.append(t)
         return out
+
+
+_FAULT_ACTIONS = ("kill", "slow", "join")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One churn event at a simulated time.
+
+    ``action`` is ``"kill"`` (the bin dies: in-flight work on it is
+    rescinded, its unconsumed results are invalidated and the lost
+    frontier re-executes on the survivors), ``"slow"`` (future work on
+    the bin runs ``factor``× slower — a straggler), or ``"join"``
+    (``bin`` is a new bin OBJECT appended to the pool).  For kill/slow
+    ``bin`` is a bin index or an existing bin object/label.
+    """
+
+    time: float
+    action: str
+    bin: Any = None
+    factor: float = 2.0
+
+    def __post_init__(self) -> None:
+        if self.action not in _FAULT_ACTIONS:
+            raise ValueError(
+                f"unknown fault action {self.action!r}; "
+                f"expected one of {_FAULT_ACTIONS}")
+        if self.time < 0:
+            raise ValueError(f"fault time must be >= 0, got {self.time!r}")
+        if self.action == "slow" and self.factor <= 0:
+            raise ValueError(
+                f"slowdown factor must be > 0, got {self.factor!r}")
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """A deterministic churn scenario for :func:`simulate`: kill / join /
+    slowdown events at simulated times, applied in ``(time, order)``
+    order.  Ties against task events resolve in the task's favor — a
+    task finishing at exactly the fault time counts as done, so
+    ``FaultSchedule`` boundaries are reproducible bit-for-bit.
+    """
+
+    events: tuple[FaultEvent, ...] = ()
+
+    def __bool__(self) -> bool:
+        return bool(self.events)
+
+    def ordered(self) -> list[FaultEvent]:
+        return [e for _, _, e in sorted(
+            (e.time, i, e) for i, e in enumerate(self.events))]
+
+    @classmethod
+    def kill(cls, time: float, bin: Any) -> "FaultSchedule":
+        return cls((FaultEvent(time, "kill", bin),))
+
+    @classmethod
+    def slow(cls, time: float, bin: Any, factor: float) -> "FaultSchedule":
+        return cls((FaultEvent(time, "slow", bin, factor),))
+
+    @classmethod
+    def join(cls, time: float, bin: Any) -> "FaultSchedule":
+        return cls((FaultEvent(time, "join", bin),))
+
+    def __add__(self, other: "FaultSchedule") -> "FaultSchedule":
+        return FaultSchedule(self.events + other.events)
 
 
 def poisson(rate: float, seed: int = 0) -> ArrivalProcess:
@@ -494,6 +561,14 @@ class SimReport:
     #: prefill→decode chain) and *complete* is the last finish minus
     #: arrival (total request latency).
     request_latency: list = field(repr=False, default_factory=list)
+    #: tasks a :class:`FaultSchedule` kill forced to run again: results
+    #: produced on the dead bin but still needed downstream, plus
+    #: in-flight tasks that had already started when the bin died
+    n_reexecuted: int = 0
+    #: seconds of work those kills threw away (full durations of
+    #: invalidated results + the started-but-aborted fractions) — the
+    #: honest re-execution charge the makespan already embeds
+    recovery_seconds: float = 0.0
 
     @property
     def divergence(self) -> float | None:
@@ -573,6 +648,8 @@ def simulate(
     host_workers: int = 4,
     replay: Any = None,
     arrivals: "ArrivalProcess | Sequence[float] | None" = None,
+    faults: "FaultSchedule | None" = None,
+    fault_policy: Any = "balanced",
 ) -> SimReport:
     """Simulate ``graph`` under a ``{node.id: bin}`` placement.
 
@@ -590,8 +667,23 @@ def simulate(
     their request's arrival instead of t=0, and the report gains
     :attr:`SimReport.request_latency` (TTFT + completion per request).
     ``arrivals=None`` is the unchanged batch path, bit-for-bit.
+
+    ``faults`` injects bin churn (:class:`FaultSchedule`): at each
+    event's simulated time the pool mutates — a *join* appends a bin, a
+    *slow* multiplies the bin's future task durations, a *kill* marks
+    the bin dead, rescinds its in-flight work, invalidates results
+    produced there but not yet consumed, re-places the displaced groups
+    through ``fault_policy``'s :meth:`Scheduler.update`
+    (``retired_bins=...``) and re-dispatches the lost frontier on the
+    survivors.  Re-execution is charged honestly
+    (:attr:`SimReport.n_reexecuted` / :attr:`SimReport.recovery_seconds`).
+    Killing the last live bin raises :class:`ValueError`.
+    ``faults=None`` leaves every code path bit-identical.
     """
     model = cost_model or CostModel()
+    if faults is not None and replay is not None:
+        raise ValueError("faults= and replay= are mutually exclusive "
+                         "(replayed durations embed the real pool)")
     overlap = model.lane_depth >= 2
     order = graph.topological_order()
     if order is None:
@@ -602,6 +694,7 @@ def simulate(
     if rp is not None and rp.workers:
         host_workers = rp.workers
 
+    bins = list(bins)            # join events append to the pool
     idx_of_bin: dict[int, int] = {id(b): i for i, b in enumerate(bins)}
 
     def placed_index(n: Node) -> int:
@@ -634,6 +727,24 @@ def simulate(
 
     res_of = {n.id: resource(n) for n in graph.nodes}
 
+    # -- fault machinery (all no-ops when faults is None) --------------
+    fault_events = faults.ordered() if faults is not None else []
+    f_at = 0
+    n_reexecuted = 0
+    recovery_seconds = 0.0
+    slow_scale = [1.0] * len(bins)
+    dead: set[int] = set()
+    fsched = fgroups = fstate = None
+    if fault_events:
+        fsched = get_scheduler(fault_policy)
+        fgroups = build_groups(graph, model.cost_fn)
+        # seed the scheduler state with the placement under test so the
+        # retire path displaces exactly the dead bin's unfinished groups
+        fstate = SchedulerState(list(bins))
+        for g in fgroups:
+            fstate.add_group(g)
+            fstate.record(g, res_of[g.nodes[0].id][1])
+
     def duration(n: Node, bin_index: int) -> float:
         if rp is not None and n.name in rp.duration:
             return rp.duration[n.name]
@@ -655,12 +766,18 @@ def simulate(
                                                model.out_bytes(n))
                 if ov:
                     dur += ov
+        # straggler injection: slow events scale FUTURE dispatches on
+        # the bin; work already in flight keeps its committed finish
+        if bin_index != _HOST and slow_scale[bin_index] != 1.0:
+            dur *= slow_scale[bin_index]
         return dur
 
     # -- event loop ----------------------------------------------------
     pending = {n.id: len(n.dependents) for n in graph.nodes}
     arrival: dict[int, float] = {}
     finish: dict[int, float] = {}
+    start_t: dict[int, float] = {}
+    popped: set[int] = set()
     # per-bin lane clocks: one copy+compute lane PAIR per member device
     # (a DeviceBin owns one pair — the unchanged overlap model; a
     # MeshBin owns one per chip in the slice, so independent tasks can
@@ -744,6 +861,7 @@ def simulate(
             busy[b] += dur * occupied
             lane_busy[b][kind] += dur * occupied
         heapq.heappush(workers, start + dur)
+        start_t[n.id] = start
         finish[n.id] = start + dur
         schedule.append((n.id, kind, b, start, start + dur))
         heapq.heappush(events, (start + dur, n.id))
@@ -790,21 +908,147 @@ def simulate(
             n_released += 1
         return n_released
 
-    done = 0
+    def process_fault() -> None:
+        """Apply the next :class:`FaultSchedule` event to the pool."""
+        nonlocal f_at, events, workers, schedule, n_reexecuted, \
+            recovery_seconds, n_transfers, transfer_seconds
+        ev = fault_events[f_at]
+        f_at += 1
+        now = ev.time
+        if ev.action == "join":
+            nb = ev.bin
+            i = len(bins)
+            bins.append(nb)
+            idx_of_bin[id(nb)] = i
+            w = bin_lane_width(nb)
+            widths.append(w)
+            copy_free.append([now] * w)   # servers free from join time on
+            if overlap:
+                compute_free.append([now] * w)
+            budgets.append(bin_memory_bytes(nb))
+            resident[i] = 0
+            peak_bytes[i] = 0
+            busy[i] = 0.0
+            lane_busy[i] = {COPY_LANE: 0.0, COMPUTE_LANE: 0.0}
+            slow_scale.append(1.0)
+            fsched.update(fstate, SchedulerUpdate(new_bins=(nb,)),
+                          graph=graph)
+            return
+        b = ev.bin if isinstance(ev.bin, int) else bin_index(bins, ev.bin)
+        if b is None or not 0 <= b < len(bins) or b in dead:
+            raise ValueError(
+                f"fault targets unknown or dead bin {ev.bin!r}")
+        if ev.action == "slow":
+            slow_scale[b] *= ev.factor
+            return
+        # -- kill: rescind in-flight work on the dying bin -------------
+        rescinded = [(t, nid) for t, nid in events if res_of[nid][1] == b]
+        if rescinded:
+            events = [e for e in events if res_of[e[1]][1] != b]
+            heapq.heapify(events)
+            pool = sorted(workers)
+            for t, nid in rescinded:
+                # the abort frees the task's worker slot now — unless a
+                # later dispatch already chained onto that slot (popped
+                # its finish value), in which case the slot is spoken for
+                if t in pool:
+                    pool.remove(t)
+                    pool.append(now)
+                if start_t[nid] < now:    # had started: work thrown away
+                    n_reexecuted += 1
+                    recovery_seconds += now - start_t[nid]
+                del finish[nid]
+            workers = pool
+            heapq.heapify(workers)
+        resc_ids = {nid for _, nid in rescinded}
+        schedule = [row for row in schedule
+                    if row[0] not in resc_ids or row[4] <= now]
+        # -- lost frontier: dead-bin results a live consumer still needs
+        needs = {n.id for n in graph.nodes
+                 if n.id not in popped and n.id not in finish}
+        dead_done = [nid for nid in popped if res_of[nid][1] == b]
+        invalid: set[int] = set()
+        changed = True
+        while changed:
+            changed = False
+            for nid in dead_done:
+                if nid in invalid:
+                    continue
+                if any(s.id in needs
+                       for s in node_by_id[nid].successors):
+                    invalid.add(nid)
+                    needs.add(nid)
+                    changed = True
+        for nid in sorted(invalid):
+            n_reexecuted += 1
+            recovery_seconds += finish[nid] - start_t[nid]
+            popped.discard(nid)
+            del finish[nid]
+        # -- route the re-placement through Scheduler.update -----------
+        for g in fgroups:
+            if fstate.assignment.get(g.root) == b \
+                    and g.root not in fstate.finished \
+                    and all(nd.id in popped for nd in g.nodes):
+                fstate.mark_finished(g)   # fully consumed: nothing moves
+        try:
+            delta = fsched.update(
+                fstate, SchedulerUpdate(retired_bins=(b,)), graph=graph)
+        except ValueError as exc:
+            raise ValueError(
+                f"FaultSchedule kills bin {b} at t={now:g}: {exc}") from exc
+        dead.add(b)
+        moved: dict[int, int] = {}
+        for root, i in delta.items():
+            for nd in fstate.groups[root].nodes:
+                moved[nd.id] = i
+                res_of[nd.id] = (_LANE_OF[nd.type], i)
+        for n in graph.nodes:        # pushes ride their source pull's bin
+            if n.type == TaskType.PUSH:
+                src = n.state.get("src")
+                if src is not None and src.id in moved:
+                    res_of[n.id] = (COPY_LANE, moved[src.id])
+        # -- recount deps for everything not (re)done, then re-dispatch
+        for n in graph.nodes:
+            if n.id not in popped and n.id not in finish:
+                pending[n.id] = sum(
+                    1 for p in n.dependents if p.id not in popped)
+        for nid in sorted(resc_ids | invalid):
+            if pending[nid] > 0:     # waits on an upstream re-execution
+                continue
+            n = node_by_id[nid]
+            at = now
+            bn = res_of[nid][1]
+            for p in n.dependents:   # re-fetch operands from survivors
+                bp = res_of[p.id][1]
+                if bp != _HOST and bn != _HOST and bp != bn:
+                    n_transfers += 1
+                    comm = model.transfer_time(model.out_bytes(p),
+                                               bins[bp], bins[bn])
+                    transfer_seconds += comm
+                    at = max(at, now + comm)
+            arrival[nid] = at
+            dispatch(n, at)
+
     total = len(graph.nodes)
     while events or r_at < len(releases):
-        if not events:
-            pump(releases[r_at][0])
+        next_ev = events[0][0] if events else None
+        next_rel = releases[r_at][0] if r_at < len(releases) else None
+        upcoming = min(x for x in (next_ev, next_rel) if x is not None)
+        # faults fire strictly before later task events: a task finishing
+        # at exactly the fault time counts as done (deterministic ties)
+        if f_at < len(fault_events) and fault_events[f_at].time < upcoming:
+            process_fault()
             continue
-        t, nid = events[0]
-        if r_at < len(releases) and releases[r_at][0] <= t:
-            pump(releases[r_at][0])
+        if next_ev is None or (next_rel is not None and next_rel <= next_ev):
+            pump(next_rel)
             continue
-        heapq.heappop(events)
-        done += 1
+        t, nid = heapq.heappop(events)
+        popped.add(nid)
         n = node_by_id[nid]
         # successors in id order so equal-time readiness ties are stable
         for s in sorted(n.successors, key=lambda s: s.id):
+            if pending[s.id] <= 0:
+                continue   # already dispatched (fault re-execution pop)
             comm = 0.0
             (kn, bn), (ks, bs) = res_of[nid], res_of[s.id]
             if bn != _HOST and bs != _HOST and bn != bs:
@@ -819,8 +1063,9 @@ def simulate(
             pending[s.id] -= 1
             if pending[s.id] == 0:
                 dispatch(s, arrival[s.id])
-    if done != total:  # pragma: no cover - guarded by acyclicity above
-        raise RuntimeError(f"simulation stalled: {done}/{total} tasks ran")
+    if len(popped) != total:  # pragma: no cover - guarded by acyclicity
+        raise RuntimeError(
+            f"simulation stalled: {len(popped)}/{total} tasks ran")
 
     makespan = max(finish.values())
     # utilization normalizes by lane width so a multi-lane mesh bin is
@@ -859,4 +1104,6 @@ def simulate(
         n_spills=n_spills,
         spill_seconds=spill_seconds,
         request_latency=request_latency,
+        n_reexecuted=n_reexecuted,
+        recovery_seconds=recovery_seconds,
     )

@@ -170,6 +170,7 @@ class ServingEngine:
         self._home: dict[int, int] = {}        # request id -> bin index
         self._pending_new_bins: list[Any] = []
         self._pending_retire_bins: list[Any] = []
+        self._pending_fail_bins: list[Any] = []
 
         n_pages = max_slots * -(-max_seq // page_tokens)
         self._arenas: dict[int, PagedKVArena] = {
@@ -272,6 +273,19 @@ class ServingEngine:
         with self._lock:
             self._pending_retire_bins.append(bin_)
 
+    def fail_bin(self, bin_: Any) -> None:
+        """Kill a KV replica bin at the next tick — the dead-arena case.
+
+        Same ``SchedulerUpdate(retired_bins=...)`` path as
+        :meth:`retire_bin`, but residents are never migrated: their KV
+        pages lived on the dead arena, so the lost frontier is the
+        requests themselves.  Each is preempted — pages released,
+        generated tokens dropped, re-queued at the head — and greedy
+        decode recomputes the identical tokens on a surviving replica.
+        """
+        with self._lock:
+            self._pending_fail_bins.append(bin_)
+
     def _has_work(self) -> bool:
         with self._lock:
             return bool(self._queue) or any(s is not None for s in self._slots)
@@ -282,14 +296,19 @@ class ServingEngine:
         reconcile arenas + residents with the placement delta."""
         with self._lock:
             new = tuple(self._pending_new_bins)
-            gone = tuple(self._pending_retire_bins)
+            drained = tuple(self._pending_retire_bins)
+            failed = tuple(self._pending_fail_bins)
             self._pending_new_bins.clear()
             self._pending_retire_bins.clear()
+            self._pending_fail_bins.clear()
+        gone = drained + failed
         if not (new or gone):
             return
         state = self._sched_state
         gone_idx = {i for i in state.live
                     if state.bins[i] in gone or i in gone}
+        dead_idx = {i for i in state.live
+                    if state.bins[i] in failed or i in failed}
         n_pages = self.max_slots * -(-self.max_seq // self.page_tokens)
         delta = self.scheduler.update(
             state, SchedulerUpdate(new_bins=new, retired_bins=gone))
@@ -299,6 +318,11 @@ class ServingEngine:
         moved_reqs = [r for r in self._slots
                       if r is not None and self._home.get(r.id) in gone_idx]
         for req in moved_reqs:
+            if self._home.get(req.id) in dead_idx:
+                # dead arena: the pages are gone, there is nothing to
+                # migrate — the request IS the lost frontier
+                self._preempt(req)
+                continue
             groups = self._req_groups.get(req.id, ())
             dest = next((delta[g.root] for g in groups if g.root in delta),
                         None)

@@ -141,3 +141,36 @@ def test_check_baseline_flags_memory_bytes_mismatch():
     cur = dict(_payload({"chain": 1.0}), memory_bytes=4096)
     assert any("memory_bytes" in f
                for f in sched_bench.check_baseline(cur, base))
+
+
+def test_chaos_gate_rows_pass(capsys):
+    """The fault-injected twin study (--chaos kill:1) must complete
+    every task on every cell and keep HEFT's faulted makespan within
+    the survivors bound — the two chaos gate rows."""
+    rc = sched_bench.main(["--bins", "4", "--chaos", "kill:1",
+                           "--shapes", "fanout,diamond",
+                           "--policies", "heft,balanced",
+                           "--random-seeds", "2"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "check,chaos_completes_all_tasks,PASS" in out
+    assert "check,chaos_makespan_degrades_gracefully,PASS" in out
+    assert any(line.startswith("chaos,fanout,heft,")
+               for line in out.splitlines())
+
+
+def test_chaos_rejects_bad_specs(capsys):
+    import pytest
+
+    with pytest.raises(SystemExit):            # argparse p.error
+        sched_bench.main(["--bins", "3", "--chaos", "kill:3"])
+    with pytest.raises(SystemExit):
+        sched_bench.main(["--chaos", "explode:1"])
+
+
+def test_check_baseline_flags_chaos_mismatch():
+    base = _payload({"chain": 1.0})
+    cur = dict(_payload({"chain": 1.0}), chaos="kill:1")
+    assert any("chaos" in f for f in sched_bench.check_baseline(cur, base))
+    # absent on both sides means off — older baselines stay comparable
+    assert sched_bench.check_baseline(_payload({"chain": 1.0}), base) == []

@@ -1,0 +1,274 @@
+"""Chaos acceptance net (ISSUE 8 headline): kill a bin mid-run on every
+policy × {chain, fanout, pipeline} and demand graceful survival.
+
+Two halves, one plan format:
+
+* **Simulator** — ``simulate(..., faults=FaultSchedule)`` completes
+  every task, re-executes a non-empty lost frontier
+  (``SimReport.n_reexecuted > 0``), and the faulted makespan stays under
+  the serial-on-survivors bound (kill time + everything that remains run
+  serially on one surviving bin).
+* **Executor** — ``Executor(chaos=ChaosPlan)`` kills a live bin at a
+  task-count trigger; the run completes and every pushed output is
+  **bit-identical** to a no-fault run (pure tasks: recovery may keep
+  stale values or re-execute, the bits cannot differ).
+"""
+import dataclasses
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+
+from workloads import build_chain, build_fanout, build_pipeline
+
+from repro.core.executor import Executor
+from repro.core.graph import Heteroflow
+from repro.sched import (ChaosEvent, ChaosPlan, CostModel, FaultSchedule,
+                         HostBin, available_policies, get_scheduler, simulate)
+
+POLICIES = sorted(available_policies())
+SHAPES = {
+    "chain": lambda: build_chain(n=12),
+    "fanout": lambda: build_fanout(width=10),
+    "pipeline": lambda: build_pipeline(n_stages=4, n_microbatches=6),
+}
+NBINS = 4
+
+
+def _sim_setup(shape, policy):
+    G = SHAPES[shape]()
+    bins = [f"d{i}" for i in range(NBINS)]
+    kwargs = {"cost_model": CostModel()} if policy == "heft" else {}
+    pl = get_scheduler(policy, **kwargs).schedule(G, bins)
+    return G, pl, bins
+
+
+def _mid_run_kill(G, pl, bins, ref):
+    """A FaultSchedule guaranteed to lose work: kill the bin of the
+    earliest-finishing device task just before the last task completes
+    would be too late — so kill right after the FIRST finish, when its
+    downstream frontier is still unexecuted."""
+    order = sorted((t, nid) for nid, t in ref.finish_times.items()
+                   if pl.get(nid) is not None)
+    t_first, nid_first = order[0]
+    victim = bins.index(pl[nid_first])
+    # strictly after the first finish (tie rule: tasks at exactly the
+    # fault time count as done), before anything else completes
+    t_next = order[1][0] if len(order) > 1 else ref.makespan
+    t_kill = t_first + (t_next - t_first) / 2 if t_next > t_first \
+        else t_first * 1.000001
+    return FaultSchedule.kill(t_kill, victim), victim, t_kill
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("shape", sorted(SHAPES))
+def test_sim_kill_completes_and_degrades_gracefully(shape, policy):
+    G, pl, bins, = _sim_setup(shape, policy)
+    ref = simulate(G, pl, bins)
+    faults, victim, t_kill = _mid_run_kill(G, pl, bins, ref)
+    rep = simulate(G, pl, bins, faults=faults)
+    # every task completes exactly once despite the kill
+    assert len(rep.finish_times) == len(G)
+    assert rep.n_reexecuted > 0
+    assert rep.recovery_seconds > 0
+    # graceful degradation: kill time + ALL work run serially on one
+    # surviving bin (plus the operand re-fetch transfers the recovery
+    # itself charges) dominates whatever recovery actually cost
+    G2 = SHAPES[shape]()
+    survivor = [bins[(victim + 1) % NBINS]]
+    pl2 = get_scheduler("balanced").schedule(G2, survivor)
+    serial = simulate(G2, pl2, survivor, host_workers=1,
+                      cost_model=dataclasses.replace(CostModel(),
+                                                     lane_depth=1))
+    bound = t_kill + serial.makespan + rep.transfer_seconds
+    assert rep.makespan <= bound + 1e-9
+    # determinism: the same faulted run replays bit-identically
+    rep2 = simulate(G, pl, bins, faults=faults)
+    assert rep2.finish_times == rep.finish_times
+    assert rep2.makespan == rep.makespan
+    assert rep2.n_reexecuted == rep.n_reexecuted
+
+
+def test_sim_no_fault_schedule_is_bit_identical():
+    """An empty FaultSchedule must not perturb the event loop at all."""
+    G, pl, bins = _sim_setup("chain", "heft")
+    a = simulate(G, pl, bins)
+    b = simulate(G, pl, bins, faults=FaultSchedule())
+    assert a.makespan == b.makespan
+    assert a.finish_times == b.finish_times
+    assert b.n_reexecuted == 0 and b.recovery_seconds == 0.0
+
+
+# ----------------------------------------------------------------------
+# executor half: live kill through ChaosPlan, bit-identical outputs
+# ----------------------------------------------------------------------
+def _exec_graph(shape):
+    """Small executable version of each shape; returns (graph, outputs)
+    where outputs are the host arrays the pushes write."""
+    g = Heteroflow(f"exec_{shape}")
+    outs = []
+
+    def unit(i, deps=()):
+        p = g.pull(np.full(8, float(i + 1), dtype=np.float32))
+        out = np.zeros(8, dtype=np.float32)
+        k = g.kernel(lambda a: np.sqrt(a) * 3.0 + 1.0, p, writes=(p,),
+                     name=f"k{i}")
+        s = g.push(p, out)
+        p.precede(k)
+        k.precede(s)
+        for d in deps:
+            d.precede(k)
+        outs.append(out)
+        return k
+
+    if shape == "chain":
+        prev = []
+        for i in range(8):
+            prev = [unit(i, prev)]
+    elif shape == "fanout":
+        root = unit(0)
+        for i in range(1, 9):
+            unit(i, [root])
+    else:  # pipeline: 3 stages × 3 microbatches
+        last = {}
+        for m in range(3):
+            deps = []
+            for s in range(3):
+                deps = [unit(10 * m + s, deps + ([last[s]]
+                                                 if s in last else []))]
+                last[s] = deps[0]
+    return g, outs
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("shape", ["chain", "fanout", "pipeline"])
+def test_executor_chaos_kill_bit_identical(shape, policy):
+    bins = lambda: [HostBin(label=f"h{i}") for i in range(3)]  # noqa: E731
+    with Executor(num_workers=2, devices=bins(), scheduler=policy) as ex:
+        g_ref, ref = _exec_graph(shape)
+        ex.run(g_ref).result(timeout=60)
+
+    plan = ChaosPlan((ChaosEvent(2, "kill", 1),))
+    with Executor(num_workers=2, devices=bins(), scheduler=policy,
+                  chaos=plan) as ex:
+        g, got = _exec_graph(shape)
+        ex.run(g).result(timeout=60)
+        st = ex.stats()
+    assert st["bin_failures"] == 1
+    assert st["dead_bins"] == ["h1"]
+    for a, b in zip(ref, got):
+        assert a.tobytes() == b.tobytes()   # bit-identical, not approx
+
+
+def test_executor_recovers_lost_frontier():
+    """Kill the bin holding a produced-but-unconsumed result: the lost
+    tasks re-enqueue and the reexecuted counter moves."""
+    bins = [HostBin(label=f"h{i}") for i in range(2)]
+    with Executor(num_workers=1, devices=bins, scheduler="round_robin") as ex:
+        g = Heteroflow("frontier")
+        p = g.pull(np.arange(8, dtype=np.float32))
+        out = np.zeros(8, dtype=np.float32)
+        k = g.kernel(lambda a: a * 2.0, p, writes=(p,), name="k")
+        s = g.push(p, out)
+        p.precede(k)
+        k.precede(s)
+        # gate: after the pull executes, kill its bin from another thread
+        import threading
+        ready = threading.Event()
+
+        def tick():
+            ready.set()
+            return 0
+
+        h = g.host(tick)
+        h.precede(k)
+        fut = ex.run(g)
+        ready.wait(timeout=30)
+        victim = ex._bin_slot(p._node.device)
+        ex.fail_bin(victim)
+        fut.result(timeout=60)
+        st = ex.stats()
+    assert st["bin_failures"] == 1
+    assert np.array_equal(out, np.arange(8, dtype=np.float32) * 2.0)
+
+
+def test_executor_killing_last_live_bin_raises_cleanly():
+    """The guard lives in the executor, not deep in a policy: the error
+    names the bin and fires before any Scheduler.update call."""
+    with Executor(num_workers=1,
+                  devices=[HostBin(label="h0"), HostBin(label="h1")],
+                  scheduler="heft") as ex:
+        ex.fail_bin(0)
+        with pytest.raises(ValueError, match="last live bin"):
+            ex.fail_bin(1)
+        with pytest.raises(ValueError, match="last live bin"):
+            ex.retire_bin("h1")
+        with pytest.raises(ValueError, match="already dead"):
+            ex.fail_bin("h0")
+
+
+def test_executor_retire_then_run_avoids_dead_bin():
+    """After a graceful retire, new runs place only on live bins and
+    results stay correct."""
+    bins = [HostBin(label=f"h{i}") for i in range(3)]
+    with Executor(num_workers=2, devices=bins, scheduler="balanced") as ex:
+        g1, ref = _exec_graph("fanout")
+        ex.run(g1).result(timeout=60)
+        ex.retire_bin("h0")
+        g2, got = _exec_graph("fanout")
+        ex.run(g2).result(timeout=60)
+        dead = bins[0]
+        for n in g2.nodes:
+            assert n.device is not dead
+        st = ex.stats()
+    assert st["bin_retirements"] == 1
+    for a, b in zip(ref, got):
+        assert a.tobytes() == b.tobytes()
+
+
+def test_executor_slow_bin_triggers_straggler_demotion():
+    """slow_bin stretches observed durations; the EWMA detector flags
+    the bin and demotes the live CostModel at an iteration boundary."""
+    bins = [HostBin(label=f"h{i}") for i in range(2)]
+    with Executor(num_workers=2, devices=bins, scheduler="heft",
+                  straggler_threshold=1.5) as ex:
+        ex.slow_bin(1, 50.0)
+        g, _ = _exec_graph("fanout")
+        ex.run_n(g, 3).result(timeout=120)
+        st = ex.stats()
+    assert st["straggler_demotions"] >= 1
+
+
+def test_chaos_plan_parse_and_determinism():
+    p1 = ChaosPlan.plan("kill:2", n_tasks=30, n_bins=4, seed=7)
+    p2 = ChaosPlan.plan("kill:2", n_tasks=30, n_bins=4, seed=7)
+    assert p1 == p2
+    assert len(p1.events) == 2
+    assert all(e.action == "kill" for e in p1.events)
+    assert len({e.bin for e in p1.events}) == 2     # distinct victims
+    assert all(1 <= e.after_tasks < 30 for e in p1.events)
+
+    s = ChaosPlan.plan("slow:1:3.5", n_tasks=30, n_bins=4)
+    assert s.events[0].action == "slow"
+    assert s.events[0].factor == 3.5
+
+    with pytest.raises(ValueError, match="bad chaos spec"):
+        ChaosPlan.plan("explode:1", n_tasks=10, n_bins=2)
+    with pytest.raises(ValueError, match="survives"):
+        ChaosPlan.plan("kill:4", n_tasks=10, n_bins=4)
+
+
+def test_chaos_plan_fault_schedule_respects_task_counts():
+    """The simulated conversion pins each trigger to the finish time of
+    its Nth task, so exactly N tasks are done when the fault fires."""
+    G = build_chain(n=10)
+    bins = [f"d{i}" for i in range(2)]
+    pl = get_scheduler("balanced").schedule(G, bins)
+    ref = simulate(G, pl, bins)
+    plan = ChaosPlan((ChaosEvent(5, "kill", 0),))
+    fs = plan.fault_schedule(G, pl, bins)
+    order = sorted(ref.finish_times.values())
+    assert fs.events[0].time == order[4]

@@ -1,0 +1,169 @@
+"""Property-based net over fault-injected simulation (ISSUE 8): random
+DAGs × random seeded ``FaultSchedule``s through ``simulate(...,
+faults=...)``.
+
+Invariants (structural — must hold for ANY graph × fault mix):
+
+* every task finishes exactly once per surviving lineage: all nodes
+  appear in ``finish_times``, each node's reported finish is its LAST
+  surviving schedule row, and extra rows are bounded by
+  ``n_reexecuted``;
+* no result is read from a dead bin: nothing executes on a killed bin
+  past its kill time, and every consumer starts only after some
+  incarnation of each producer finished;
+* ``peak_bytes`` stays within every bin's byte budget after migration.
+
+Runs under real hypothesis when installed and degrades to fixed-seed
+sampling via ``_hypothesis_compat`` otherwise (same harness as
+test_sim_properties.py).
+"""
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+
+from _hypothesis_compat import given, settings, st
+from workloads import build_random_dag
+
+from repro.sched import DeviceBin, FaultEvent, FaultSchedule, get_scheduler, simulate
+
+EPS = 1e-12
+
+
+def _random_faults(rng: random.Random, ref, nbins: int,
+                   n_kills: int, with_slow: bool) -> FaultSchedule:
+    """Seeded fault mix: ``n_kills`` distinct victims at random fractions
+    of the no-fault makespan (always leaving a survivor), plus an
+    optional slowdown on a random bin."""
+    events = []
+    victims = rng.sample(range(nbins), n_kills)
+    for b in victims:
+        t = ref.makespan * rng.uniform(0.05, 0.95)
+        events.append(FaultEvent(t, "kill", b))
+    if with_slow:
+        survivors = [b for b in range(nbins) if b not in victims]
+        events.append(FaultEvent(ref.makespan * rng.uniform(0.05, 0.5),
+                                 "slow", rng.choice(survivors),
+                                 rng.uniform(1.2, 4.0)))
+    return FaultSchedule(tuple(events))
+
+
+def _run(seed: int, n_kernels: int, nbins: int, n_kills: int,
+         with_slow: bool, policy: str, budget: int | None = None):
+    rng = random.Random(seed)
+    G, _ = build_random_dag(n_kernels=n_kernels, seed=seed,
+                            with_pushes=True)
+    kw = {"memory_bytes": budget} if budget else {}
+    bins = [DeviceBin(f"d{i}", **kw) for i in range(nbins)]
+    pl = get_scheduler(policy).schedule(G, bins)
+    ref = simulate(G, pl, bins)
+    faults = _random_faults(rng, ref, nbins, n_kills, with_slow)
+    rep = simulate(G, pl, bins, faults=faults)
+    return G, bins, faults, ref, rep
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 500), st.sampled_from((12, 24, 40)),
+       st.sampled_from((2, 3, 4)), st.booleans(),
+       st.sampled_from(("balanced", "heft", "round_robin")))
+def test_every_task_finishes_exactly_once(seed, n_kernels, nbins,
+                                          with_slow, policy):
+    n_kills = min(nbins - 1, 1 + seed % 2)
+    G, _, _, _, rep = _run(seed, n_kernels, nbins, n_kills, with_slow,
+                           policy)
+    assert set(rep.finish_times) == {n.id for n in G.nodes}
+    # the reported finish is the LAST surviving incarnation's end
+    last_end: dict[int, float] = {}
+    rows_of: dict[int, int] = {}
+    for nid, _, _, s, e in rep.schedule:
+        last_end[nid] = max(last_end.get(nid, -1.0), e)
+        rows_of[nid] = rows_of.get(nid, 0) + 1
+    for nid, t in rep.finish_times.items():
+        assert abs(last_end[nid] - t) <= EPS
+    # surviving lineage: one row per node + at most one invalidated
+    # (pre-kill) row per re-execution
+    extra = sum(c - 1 for c in rows_of.values())
+    assert extra <= rep.n_reexecuted
+    assert all(c >= 1 for c in rows_of.values())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 500), st.sampled_from((12, 24, 40)),
+       st.sampled_from((2, 3, 4)),
+       st.sampled_from(("balanced", "heft", "round_robin")))
+def test_no_result_read_from_dead_bin(seed, n_kernels, nbins, policy):
+    n_kills = min(nbins - 1, 1 + seed % 2)
+    G, bins, faults, _, rep = _run(seed, n_kernels, nbins, n_kills,
+                                   False, policy)
+    killed_at = {e.bin: e.time for e in faults.events if e.action == "kill"}
+    # nothing executes on a dead bin past its kill time (tie rule: a
+    # task completing exactly at the kill time counts as done)
+    for nid, _, b, s, e in rep.schedule:
+        if b in killed_at:
+            assert e <= killed_at[b] + EPS, (
+                f"node {nid} ran on bin {b} past its kill time")
+    # consumers only start after SOME incarnation of each producer
+    # finished — the incarnation they read was valid when dispatched
+    first_end: dict[int, float] = {}
+    start_of: dict[int, float] = {}
+    for nid, _, _, s, e in rep.schedule:
+        first_end[nid] = min(first_end.get(nid, float("inf")), e)
+        start_of[nid] = max(start_of.get(nid, -1.0), s)
+    for n in G.nodes:
+        for sc in n.successors:
+            assert start_of[sc.id] >= first_end[n.id] - EPS, (
+                f"'{sc.name}' started before any run of '{n.name}' ended")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 500), st.sampled_from((12, 24)),
+       st.sampled_from((2, 3)))
+def test_peak_bytes_within_budgets_after_migration(seed, n_kernels, nbins):
+    """Byte accounting survives the migration: every bin's high-water
+    mark — including the survivors that absorbed the dead bin's work —
+    stays at or under its memory_bytes budget."""
+    budget = 1 << 14
+    _, bins, _, _, rep = _run(seed, n_kernels, nbins, 1, False,
+                              "balanced", budget=budget)
+    for i, b in enumerate(bins):
+        assert rep.peak_bytes.get(i, 0) <= b.memory_bytes, (
+            f"bin {i} peak {rep.peak_bytes.get(i)} over budget")
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 300), st.sampled_from((12, 24)),
+       st.sampled_from((2, 4)), st.booleans())
+def test_faulted_run_is_deterministic(seed, n_kernels, nbins, with_slow):
+    """Same graph, placement, and FaultSchedule → bit-identical report."""
+    rng = random.Random(seed)
+    G, _ = build_random_dag(n_kernels=n_kernels, seed=seed,
+                            with_pushes=True)
+    bins = [f"d{i}" for i in range(nbins)]
+    pl = get_scheduler("balanced").schedule(G, bins)
+    ref = simulate(G, pl, bins)
+    faults = _random_faults(rng, ref, nbins, 1, with_slow)
+    a = simulate(G, pl, bins, faults=faults)
+    b = simulate(G, pl, bins, faults=faults)
+    assert a.makespan == b.makespan
+    assert a.finish_times == b.finish_times
+    assert a.schedule == b.schedule
+    assert a.n_reexecuted == b.n_reexecuted
+    assert a.recovery_seconds == b.recovery_seconds
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 300), st.sampled_from((2, 3, 4)))
+def test_killing_every_bin_raises_cleanly(seed, nbins):
+    """A schedule that kills the last live bin is a user error: the
+    simulator raises a ValueError naming the fault, not a policy crash."""
+    import pytest
+    G, _ = build_random_dag(n_kernels=12, seed=seed, with_pushes=False)
+    bins = [f"d{i}" for i in range(nbins)]
+    pl = get_scheduler("balanced").schedule(G, bins)
+    ref = simulate(G, pl, bins)
+    t = ref.makespan * 0.25
+    events = tuple(FaultEvent(t + i * 1e-9, "kill", b)
+                   for i, b in enumerate(range(nbins)))
+    with pytest.raises(ValueError, match="kills bin"):
+        simulate(G, pl, bins, faults=FaultSchedule(events))

@@ -174,6 +174,33 @@ def test_retiring_last_bin_is_an_error():
         sched.update(state, SchedulerUpdate(retired_bins=("b0",)))
 
 
+def test_retire_with_in_flight_finish_same_update():
+    """Event-order pin (ISSUE 8): a finish event for a group on a bin
+    retired in the SAME update is processed BEFORE the retire — the
+    group counts as finished, is never displaced or re-placed, and its
+    assignment survives as history; only genuinely unfinished groups on
+    the bin move."""
+    G = build_serving_trace(serving_specs(6, seed=5))
+    groups = build_groups(G)
+    sched = get_scheduler("balanced")
+    state = SchedulerState(BINS)
+    sched.update(state, SchedulerUpdate(new_tasks=tuple(groups)))
+    on_b1 = [g for g in groups if state.assignment[g.root] == 1]
+    assert len(on_b1) >= 2                # need a finisher AND a mover
+    finishing, movers = on_b1[0], on_b1[1:]
+    delta = sched.update(state, SchedulerUpdate(
+        new_finished_tasks=(finishing,), retired_bins=("b1",)))
+    # the in-flight finish landed first: not displaced, not in the delta
+    assert finishing.root not in delta
+    assert finishing.root in state.finished
+    assert state.assignment[finishing.root] == 1   # history, not residency
+    # everything else on the retired bin moved off it
+    assert set(delta) == {g.root for g in movers}
+    assert all(state.assignment[g.root] != 1 for g in movers)
+    assert 1 not in state.live
+    assert state.active_load.get(1, 0.0) == 0.0
+
+
 # -- deprecated shims -----------------------------------------------------
 
 def test_reschedule_shim_warns_and_delegates():
@@ -189,6 +216,27 @@ def test_reschedule_shim_warns_and_delegates():
                                  migrate_top_k=2)
     assert isinstance(moved, dict)
     assert all(v in BINS for v in moved.values())
+
+
+#: release cycle 2 of 2 for the PR 7 ``reschedule()``/``migrate_top_k=``
+#: DeprecationWarning shims (cycle 1 announced in CHANGES.md, ISSUE 8):
+#: once this date passes, delete the shims and this check with them.
+_SHIM_REMOVE_BY = "2027-02-01"
+
+
+def test_reschedule_shim_remove_by_date():
+    """Remove-by-date check: the shim must still WARN (not silently
+    work, not be gone early) until its scheduled removal — and this
+    test starts failing once the removal date arrives, forcing the
+    cleanup instead of letting the deprecation rot."""
+    import datetime
+    assert hasattr(get_scheduler("balanced"), "reschedule"), (
+        "shim removed early: also delete this check and close the cycle")
+    assert datetime.date.today() < datetime.date.fromisoformat(
+        _SHIM_REMOVE_BY), (
+        f"release cycle 2 of 2 reached ({_SHIM_REMOVE_BY}): delete the "
+        f"reschedule()/migrate_top_k= shims in sched/base.py, their "
+        f"tests, and the CHANGES.md cycle note")
 
 
 # -- arrivals + latency ---------------------------------------------------
