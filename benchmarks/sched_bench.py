@@ -49,6 +49,16 @@ the previous one fully completes).  The
 policy's online p99 TTFT to beat or tie static batching.  Without the
 flag nothing changes — the baseline rows stay bit-identical.
 
+``--timeline out.json`` exports a Perfetto-loadable Chrome-trace JSON
+(load at https://ui.perfetto.dev): one live executor run of the gated
+policy's fanout cell — per-bin copy ∥ compute lane rows rendered from
+the profiler trace — merged with its replay-simulated twin, plus
+``timeline,...`` rows quantifying per-bin divergence
+(``repro.obs.diff_timelines``).  Additive: the sweep rows and the
+``--json`` payload never change; without the flag the
+``obs_off_bit_identical`` gate row asserts the gated policy's
+makespans still equal the checked-in baseline EXACTLY.
+
 ``--measure`` additionally executes every cell on the real executor
 (one JAX-device bin per simulated bin), fits a ``CostModel`` from the
 recorded trace, and appends measured wall-clock + the fitted
@@ -269,6 +279,60 @@ def measure(policy_name: str, shape: str, n_bins: int, workers: int,
     return prof.makespan(), pred
 
 
+def timeline_study(args, bins: list, out_path: str) -> None:
+    """Export the per-bin lane timeline of one live executor run next
+    to its replay-simulated twin (``--timeline``).
+
+    Runs the gated policy's fanout cell on the real executor (one
+    JAX-device bin per simulated bin), fits a ``CostModel`` from the
+    recorded trace, replays the measured placement through the
+    simulator, and writes one merged Perfetto-loadable Chrome-trace
+    JSON — the measured process group first, the simulated one second.
+    Prints ``timeline,...`` divergence rows (``repro.obs
+    .diff_timelines``, the CostModel-calibration feedback signal — see
+    docs/observability.md).  Additive by construction: the sweep rows
+    and the ``--json`` payload never change.
+    """
+    import jax
+
+    from repro.core import Executor
+    from repro.obs import (
+        diff_timelines,
+        merge_timelines,
+        save_timeline,
+        timeline_from_schedule,
+        timeline_from_trace,
+    )
+    from repro.sched import TaskProfiler
+
+    dev = [jax.devices()[0]] * len(bins)
+    prof = TaskProfiler()
+    G = ALL_SHAPES["fanout"]()
+    with Executor(num_workers=args.measure_workers, devices=dev,
+                  scheduler=get_scheduler(GATED_POLICY),
+                  profiler=prof) as ex:
+        ex.run(G).result(timeout=600)
+    labels = list(ex.device_labels)
+    fitted = CostModel.fit(prof)
+    # replay over the per-slot labels, same reasoning as measure()
+    placement = {n.id: n.bin_key for n in G.nodes if n.bin_key is not None}
+    rep = simulate(G, placement, labels, cost_model=fitted,
+                   host_workers=args.measure_workers)
+    measured = timeline_from_trace(prof)
+    simulated = timeline_from_schedule(rep, labels, graph=G)
+    diff = diff_timelines(measured, simulated)
+    save_timeline(merge_timelines(measured, simulated), out_path)
+    print("timeline,bin,measured_busy_ms,sim_busy_ms,divergence")
+    for row in diff["bins"]:
+        print(f"timeline,{row['bin']},{row['measured_busy_s'] * 1e3:.4f},"
+              f"{row['simulated_busy_s'] * 1e3:.4f},"
+              f"{row['divergence']:.3f}")
+    mk = diff["makespan"]
+    print(f"timeline,makespan,{mk['measured_s'] * 1e3:.4f},"
+          f"{mk['simulated_s'] * 1e3:.4f},{mk['divergence']:.3f}")
+    print(f"timeline,{out_path}")
+
+
 def parse_arrival(spec: str):
     """Parse ``--arrival``: ``poisson:RATE`` (requests/second) → a
     deterministic :func:`~repro.sched.poisson` arrival process."""
@@ -421,6 +485,45 @@ def check_baseline(payload: dict, baseline: dict, *,
     return failures
 
 
+def exact_baseline_gate(name: str, payload: dict) -> bool:
+    """Print one ``check,<name>`` row requiring the gated policy's
+    makespans to equal the checked-in default baseline EXACTLY (``==``,
+    not within tolerance) — the bit-identical claim a knob makes when
+    it is off.  Config mismatches make the comparison meaningless, so
+    they only WARN (returns True: advisory, not a failure)."""
+    try:
+        with open(DEFAULT_BASELINE) as f:
+            base = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check,{name},WARN,unreadable baseline: {e}")
+        return True
+    mismatch = [k for k in ("bins", "speeds", "host_workers", "lane_depth")
+                if base.get(k) != payload.get(k)]
+    mismatch += [k for k in ("collective_alpha", "collective_beta",
+                             "memory_bytes")
+                 if base.get(k, 0.0) != payload.get(k, 0.0)]
+    # absent means "" (off): the chaos study never perturbs the sweep
+    # rows, but a baseline refreshed under --chaos should downgrade the
+    # exactness claim to a config WARN
+    mismatch += ["chaos"] if (base.get("chaos", "")
+                              != payload.get("chaos", "")) else []
+    if mismatch:
+        print(f"check,{name},WARN,config mismatch on {mismatch}")
+        return True
+    bad = []
+    for shape, pols in sorted(base.get("makespan_s", {}).items()):
+        if GATED_POLICY not in pols:
+            continue
+        cur = payload["makespan_s"].get(shape, {}).get(GATED_POLICY)
+        if cur is not None and cur != pols[GATED_POLICY]:
+            bad.append((shape, cur, pols[GATED_POLICY]))
+    good = not bad
+    detail = ";".join(f"{s}:run={c!r},baseline={b!r}"
+                      for s, c, b in bad) or DEFAULT_BASELINE
+    print(f"check,{name},{'PASS' if good else 'FAIL'},{detail}")
+    return good
+
+
 def chaos_study(args, bins: list, shapes: list[str], policies: list[str],
                 model: CostModel) -> bool:
     """Fault-injected twin study (``--chaos``): replay every plain-shape
@@ -557,6 +660,14 @@ def main(argv: list[str] | None = None) -> int:
                         "plain-shape cell under the faults and gates "
                         "completion + graceful degradation; off by "
                         "default (baseline rows are untouched either way)")
+    p.add_argument("--timeline", metavar="PATH",
+                   help="export a Perfetto-loadable Chrome-trace JSON: "
+                        "one live executor run of the gated policy's "
+                        "fanout cell (per-bin copy/compute lane rows) "
+                        "merged with its replay-simulated twin, plus "
+                        "timeline,... divergence rows; off by default "
+                        "(sweep rows and --json payload are untouched "
+                        "either way)")
     p.add_argument("--measure", action="store_true",
                    help="also run every cell on the real executor, fit "
                         "a CostModel from its trace, and report measured "
@@ -598,9 +709,9 @@ def main(argv: list[str] | None = None) -> int:
             p.error(str(e))
     mesh = has_mesh_bin(bins)
     staged = has_stage_bin(bins)
-    if args.measure and (mesh or staged):
-        p.error("--measure runs on real JAX devices; mesh:NxM and "
-                "stage:N bins are simulator-only")
+    if (args.measure or args.timeline) and (mesh or staged):
+        p.error("--measure/--timeline run on real JAX devices; mesh:NxM "
+                "and stage:N bins are simulator-only")
     model = CostModel(device_speed=args.parsed_speeds,
                       lane_depth=args.lane_depth,
                       collective_alpha=args.collective_alpha,
@@ -660,6 +771,9 @@ def main(argv: list[str] | None = None) -> int:
     chaos_ok = True
     if args.chaos:
         chaos_ok = chaos_study(args, bins, shapes, policies, model)
+
+    if args.timeline:
+        timeline_study(args, bins, args.timeline)
 
     # baseline payloads keep the legacy integer bin count; mesh pools
     # record their spec string (config mismatch vs an int baseline is
@@ -824,48 +938,13 @@ def main(argv: list[str] | None = None) -> int:
         print(f"check,memory_capped_not_worse_than_2x_uncapped,"
               f"{'PASS' if good else 'FAIL'},{detail}")
     if not args.memory_bytes and GATED_POLICY in policies:
-        # budgets off must be the legacy scheduler byte for byte: the
-        # gated policy's makespans have to equal the checked-in baseline
-        # EXACTLY (==, not within tolerance).  Config mismatches make
-        # the comparison meaningless, so they only WARN.
-        try:
-            with open(DEFAULT_BASELINE) as f:
-                base = json.load(f)
-        except (OSError, ValueError) as e:
-            base = None
-            print(f"check,budgets_off_bit_identical,WARN,"
-                  f"unreadable baseline: {e}")
-        if base is not None:
-            mismatch = [k for k in ("bins", "speeds", "host_workers",
-                                    "lane_depth")
-                        if base.get(k) != payload.get(k)]
-            mismatch += [k for k in ("collective_alpha", "collective_beta",
-                                     "memory_bytes")
-                         if base.get(k, 0.0) != payload.get(k, 0.0)]
-            # absent means "" (off): the chaos study never perturbs the
-            # sweep rows, but a baseline refreshed under --chaos should
-            # downgrade the exactness claim to a config WARN
-            mismatch += ["chaos"] if (base.get("chaos", "")
-                                      != payload.get("chaos", "")) else []
-            if mismatch:
-                print(f"check,budgets_off_bit_identical,WARN,"
-                      f"config mismatch on {mismatch}")
-            else:
-                bad = []
-                for shape, pols in sorted(base.get("makespan_s",
-                                                   {}).items()):
-                    if GATED_POLICY not in pols:
-                        continue
-                    cur = payload["makespan_s"].get(shape, {}) \
-                                               .get(GATED_POLICY)
-                    if cur is not None and cur != pols[GATED_POLICY]:
-                        bad.append((shape, cur, pols[GATED_POLICY]))
-                good = not bad
-                ok &= good
-                detail = ";".join(f"{s}:run={c!r},baseline={b!r}"
-                                  for s, c, b in bad) or DEFAULT_BASELINE
-                print(f"check,budgets_off_bit_identical,"
-                      f"{'PASS' if good else 'FAIL'},{detail}")
+        # budgets off must be the legacy scheduler byte for byte
+        ok &= exact_baseline_gate("budgets_off_bit_identical", payload)
+    if not args.timeline and GATED_POLICY in policies:
+        # observability off must not perturb a single simulated number:
+        # the instrumented executor/simulator with obs=None is the
+        # pre-obs code path, byte for byte
+        ok &= exact_baseline_gate("obs_off_bit_identical", payload)
 
     if args.check_baseline:
         try:

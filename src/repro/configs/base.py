@@ -217,9 +217,10 @@ class SchedConfig:
     :meth:`Scheduler.update` loop: the executor seeds a
     ``SchedulerState`` with ``measured_load`` (and ``migrate_top_k``)
     and sends an empty ``SchedulerUpdate`` — a reschedule *is* an
-    update with measured-load state and no new work.  The old
-    ``Scheduler.reschedule()`` entry point is a DeprecationWarning shim
-    over the same path.
+    update with measured-load state and no new work.  (The old
+    ``Scheduler.reschedule()`` entry point went through its two-cycle
+    deprecation and was removed; docs/scheduling.md has the migration
+    guide.)
 
     Non-ideal sharded scaling (``CostModel.collective_overhead``):
     ``collective_alpha`` (seconds per ring hop) and ``collective_beta``

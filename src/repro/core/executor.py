@@ -38,7 +38,7 @@ from .graph import Heteroflow, KernelTask, Node, PullTask, TaskType, _span_view
 from .memory import DeviceArena, OutOfMemory
 from .placement import estimate_node_cost
 from .streams import (LaneRegistry, ScopedDeviceContext, bin_labels,
-                      dedup_labels, execution_target)
+                      dedup_labels, execution_target, lane_kind)
 
 __all__ = ["Executor", "Topology"]
 
@@ -142,6 +142,18 @@ class Executor:
     profiler: optional ``repro.sched.TaskProfiler``; every executed node
         is reported with wall-clock timestamps, bin label, and bytes
         moved, building the JSON trace ``CostModel.fit`` calibrates from.
+    obs: optional ``repro.obs.SpanRecorder`` flight recorder.  When set,
+        every executed node opens a span with bin/lane/node/stage
+        attribution, and the runtime's notable transitions — steals,
+        arena spills/refills, bin join/retire/fail/slowdown, straggler
+        demotions, re-placement windows, chaos triggers — land as
+        instant events in the recorder's bounded ring.  When a topology
+        fails, the ring is dumped to the recorder's ``dump_path`` (when
+        one is configured) as a Perfetto-loadable trace.  ``None``
+        (default) records nothing and adds no overhead.  Independent of
+        the recorder, scalar runtime counters live in :attr:`metrics`
+        (a ``repro.obs.MetricsRegistry``); :meth:`stats` is a
+        back-compat view over it.
     steal_locality: when True (default), thieves try victims whose deque
         head is placed on the same bin as the thief's last-executed
         device task before falling back to random victims — stolen work
@@ -178,6 +190,7 @@ class Executor:
         cost_fn: Callable[[Node], float] = estimate_node_cost,
         scheduler: Any = "balanced",
         profiler: Any = None,
+        obs: Any = None,
         steal_locality: bool = True,
         replace_every: int = 0,
         migrate_top_k: int = 0,
@@ -200,12 +213,17 @@ class Executor:
         if not self.devices:
             raise ValueError("need at least one device bin")
         self.device_labels = bin_labels(self.devices)
+        from ..obs import MetricsRegistry  # lazy: obs imports core
         self._cost_fn = cost_fn
         self.scheduler = get_scheduler(scheduler)
         self._profiler = profiler
+        self._obs = obs
+        #: scalar runtime counters publish here; stats() is a view over
+        #: it and external scrapers can read metrics.snapshot() directly
+        self.metrics = MetricsRegistry()
         self._steal_locality = steal_locality
         self._replace_every = replace_every
-        self._replacements = 0
+        self._replacements = self.metrics.counter("replacements")
         # re-placement measures load per window as a delta against this
         # snapshot of the workers' cumulative per-bin busy counters
         self._busy_snapshot: dict[str, float] = {}
@@ -227,10 +245,10 @@ class Executor:
         # (insertion/touch order = coldest first), spill/refill counters
         self._resident: dict[int, OrderedDict[int, Node]] = {}
         self._mem_lock = threading.Lock()
-        self._spills = 0
-        self._refills = 0
-        self._spilled_bytes = 0
-        self._refilled_bytes = 0
+        self._spills = self.metrics.counter("spills")
+        self._refills = self.metrics.counter("refills")
+        self._spilled_bytes = self.metrics.counter("spilled_bytes")
+        self._refilled_bytes = self.metrics.counter("refilled_bytes")
 
         # bin-event stream state (fail / retire / slowdown / join):
         # dead slots stay in self.devices so indices and labels remain
@@ -238,14 +256,18 @@ class Executor:
         self._dead_bins: set[int] = set()
         self._recovery_lock = threading.RLock()
         self._slowdown: dict[str, float] = {}
-        self._bin_failures = 0
-        self._bin_retirements = 0
-        self._reexecuted = 0
-        self._straggler_demotions = 0
+        self._bin_failures = self.metrics.counter("bin_failures")
+        self._bin_retirements = self.metrics.counter("bin_retirements")
+        self._reexecuted = self.metrics.counter("reexecuted")
+        self._straggler_demotions = self.metrics.counter(
+            "straggler_demotions")
         # chaos fault injection (sched.chaos.ChaosPlan): one runner per
-        # executor — its task-count triggers fire exactly once
+        # executor — its task-count triggers fire exactly once, as
+        # ``chaos_trigger`` instants in the flight recorder when one is
+        # attached
         self._chaos = chaos
-        self._chaos_runner = chaos.runner() if chaos is not None else None
+        self._chaos_runner = (chaos.runner(obs=obs)
+                              if chaos is not None else None)
         self._chaos_counter = itertools.count(1)
         # online straggler detection: EWMA of observed-vs-predicted
         # kernel duration per bin (sched.chaos.StragglerDetector);
@@ -411,21 +433,39 @@ class Executor:
         return views
 
     def stats(self) -> dict[str, Any]:
+        """Back-compat view over :attr:`metrics`.
+
+        Scalar counts read registry counters; the per-worker
+        steal/executed tallies (kept lock-free on the workers) are
+        published into registry gauges here, so an external scraper
+        reading ``executor.metrics.snapshot()`` sees the same numbers
+        this dict reports.  Dict-valued entries (``bin_busy_s``,
+        ``arena_peak_bytes``, ``lane_depths``) stay computed views.
+        """
+        m = self.metrics
+        m.gauge("workers").set(self.num_workers)
+        m.gauge("devices").set(len(self.devices))
+        m.gauge("steals").set(sum(w.steals for w in self._workers))
+        m.gauge("steal_local").set(
+            sum(w.steal_local for w in self._workers))
+        m.gauge("steal_cross").set(
+            sum(w.steal_cross for w in self._workers))
+        m.gauge("executed").set(sum(w.executed for w in self._workers))
         return {
-            "workers": self.num_workers,
-            "devices": len(self.devices),
+            "workers": m.gauge("workers").value,
+            "devices": m.gauge("devices").value,
             "policy": self.scheduler.name,
-            "steals": sum(w.steals for w in self._workers),
-            "steal_local": sum(w.steal_local for w in self._workers),
-            "steal_cross": sum(w.steal_cross for w in self._workers),
+            "steals": m.gauge("steals").value,
+            "steal_local": m.gauge("steal_local").value,
+            "steal_cross": m.gauge("steal_cross").value,
             "steal_locality": self._steal_locality,
-            "executed": sum(w.executed for w in self._workers),
-            "replacements": self._replacements,
+            "executed": m.gauge("executed").value,
+            "replacements": self._replacements.value,
             # bin-event stream (fail / retire / slowdown / straggler)
-            "bin_failures": self._bin_failures,
-            "bin_retirements": self._bin_retirements,
-            "reexecuted": self._reexecuted,
-            "straggler_demotions": self._straggler_demotions,
+            "bin_failures": self._bin_failures.value,
+            "bin_retirements": self._bin_retirements.value,
+            "reexecuted": self._reexecuted.value,
+            "straggler_demotions": self._straggler_demotions.value,
             "dead_bins": sorted(self.device_labels[i]
                                 for i in self._dead_bins),
             "bin_busy_s": self._merged_bin_busy(),
@@ -433,10 +473,10 @@ class Executor:
             # refill round trips and per-bin high-water bytes — peaks
             # can never exceed a budgeted bin's memory_bytes (the arena
             # is capacity-capped below the budget)
-            "spills": self._spills,
-            "refills": self._refills,
-            "spilled_bytes": self._spilled_bytes,
-            "refilled_bytes": self._refilled_bytes,
+            "spills": self._spills.value,
+            "refills": self._refills.value,
+            "spilled_bytes": self._spilled_bytes.value,
+            "refilled_bytes": self._refilled_bytes.value,
             "arena_peak_bytes": {
                 label: self.arenas[id(d)].peak_bytes
                 for d, label in zip(self.devices, self.device_labels)
@@ -511,6 +551,8 @@ class Executor:
                 # atomic dict swap: _merged_bin_busy iterates concurrently
                 w.bin_busy = {label: w.bin_busy.get(label, 0.0)
                               for label in self.device_labels}
+            if self._obs is not None:
+                self._obs.event("join_bin", bin=self.device_labels[-1])
             return len(self.devices) - 1
 
     def slow_bin(self, b: Any, factor: float) -> None:
@@ -526,6 +568,8 @@ class Executor:
             if idx in self._dead_bins:
                 raise ValueError(f"bin {label!r} is dead/retired")
             self._slowdown[label] = self._slowdown.get(label, 1.0) * factor
+            if self._obs is not None:
+                self._obs.event("slow_bin", bin=label, factor=factor)
 
     def retire_bin(self, b: Any) -> None:
         """Gracefully retire bin ``b``: drain and migrate.
@@ -560,7 +604,9 @@ class Executor:
                     n.state["spilled"] = True
             self._dead_bins.add(idx)
             self._slowdown.pop(label, None)
-            self._bin_retirements += 1
+            self._bin_retirements.inc()
+            if self._obs is not None:
+                self._obs.event("retire_bin", bin=label)
 
     def fail_bin(self, b: Any) -> None:
         """Simulate the abrupt death of bin ``b`` and recover.
@@ -588,7 +634,9 @@ class Executor:
                 self._recover(topo, idx)
             self._dead_bins.add(idx)
             self._slowdown.pop(label, None)
-            self._bin_failures += 1
+            self._bin_failures.inc()
+            if self._obs is not None:
+                self._obs.event("fail_bin", bin=label)
 
     def _retire_placement(self, topo: Topology, idx: int) -> dict[int, Any]:
         """Re-place every group resident on bin ``idx`` through the
@@ -677,7 +725,7 @@ class Executor:
                 for s in n.successors:
                     if s.join_counter > 0:
                         s.join_counter += 1
-        self._reexecuted += len(lost)
+        self._reexecuted.inc(len(lost))
         self._bulk_enqueue(lost)
 
     def _demote_stragglers(self, topo: Topology) -> None:
@@ -687,11 +735,14 @@ class Executor:
         ``migrate_top_k`` path when configured).  Runs quiesced at the
         iteration boundary, same safety argument as ``_replace``."""
         from ..sched.chaos import StragglerDetector, demoted_model
+        if self._obs is not None:
+            self._obs.event("straggler_demotion",
+                            stragglers=sorted(self._straggler.stragglers()))
         model = getattr(self.scheduler, "cost_model", None)
         if model is not None:
             self.scheduler.cost_model = demoted_model(
                 model, self.devices, self._straggler)
-        self._straggler_demotions += 1
+        self._straggler_demotions.inc()
         # fresh observation window: a demotion acts on the evidence,
         # stale ratios must not re-trigger forever
         det = self._straggler
@@ -762,6 +813,10 @@ class Executor:
                     node = v.deque.popleft()
                     w.steals += 1
                     self._note_steal(w, node)
+                    if self._obs is not None:
+                        self._obs.event("steal", bin=node.bin_key,
+                                        node=node.id, thief=w.id,
+                                        victim=v.id)
                     return node
         with self._submit_lock:
             if self._submit_q:
@@ -831,6 +886,15 @@ class Executor:
     def _invoke(self, w: _Worker, node: Node) -> None:
         topo: Topology = node.topology
         if topo.failed is None:
+            # correlation id for arena events fired while this node runs
+            # (profiler v6 spill/refill ``span`` field): thread-local, so
+            # _spill/_refill deep in the call chain can read it
+            self._local.current_node = node.id
+            sid = (self._obs.begin(node.name, bin=node.bin_key,
+                                   lane=lane_kind(node.type), node=node.id,
+                                   stage=node.state.get("stage"),
+                                   worker=w.id, iteration=topo.iteration)
+                   if self._obs is not None else 0)
             start = time.perf_counter()
             try:
                 handler = self._VISITOR[node.type]
@@ -846,6 +910,8 @@ class Executor:
                 if sl is not None and sl > 1.0:
                     time.sleep((sl - 1.0) * (time.perf_counter() - start))
             end = time.perf_counter()
+            if self._obs is not None:
+                self._obs.end(sid, ok=topo.failed is None)
             # telemetry must not kill the worker: a raising cost_fn or
             # profiler routes into topo.failed like any task exception,
             # so the topology future still resolves
@@ -975,14 +1041,21 @@ class Executor:
                 victim.state["device_data"] = host
                 nbytes = host.nbytes
             victim.state["spilled"] = True
-            self._spills += 1
-            self._spilled_bytes += nbytes
+            self._spills.inc()
+            self._spilled_bytes.inc(nbytes)
         arena.free(off)
+        # v6 correlation: ``node`` is the spilled pull, ``span`` the node
+        # being invoked on this thread (whose allocation forced eviction)
+        trigger = getattr(self._local, "current_node", None)
         if self._profiler is not None and hasattr(self._profiler,
                                                   "record_event"):
             self._profiler.record_event(
                 "spill", bin=victim.bin_key, bytes=nbytes,
-                start=t0, end=time.perf_counter())
+                start=t0, end=time.perf_counter(),
+                node=victim.id, span=trigger)
+        if self._obs is not None:
+            self._obs.event("spill", bin=victim.bin_key, node=victim.id,
+                            lane="arena", bytes=nbytes, trigger=trigger)
 
     def _refill(self, node: Node) -> Any:
         """Re-pull a spilled buffer onto its bin (H2D), re-charging the
@@ -1001,13 +1074,18 @@ class Executor:
                 node.device, arena, node, max(nbytes, 1))
         with self._mem_lock:
             node.state["device_data"] = buf
-            self._refills += 1
-            self._refilled_bytes += nbytes
+            self._refills.inc()
+            self._refilled_bytes.inc(nbytes)
+        trigger = getattr(self._local, "current_node", None)
         if self._profiler is not None and hasattr(self._profiler,
                                                   "record_event"):
             self._profiler.record_event(
                 "refill", bin=node.bin_key, bytes=nbytes,
-                start=t0, end=time.perf_counter())
+                start=t0, end=time.perf_counter(),
+                node=node.id, span=trigger)
+        if self._obs is not None:
+            self._obs.event("refill", bin=node.bin_key, node=node.id,
+                            lane="arena", bytes=nbytes, trigger=trigger)
         return buf
 
     def _invoke_push(self, w: _Worker, node: Node) -> None:
@@ -1139,6 +1217,14 @@ class Executor:
         with self._topo_cv:
             self._topologies.pop(topo.id, None)
             self._topo_cv.notify_all()
+        if topo.failed is not None and self._obs is not None:
+            # flight-recorder dump: the ring's recent window, written as
+            # a Perfetto trace next to the failure (never raises into
+            # the worker — a fault dump must not mask the fault)
+            try:
+                self._obs.on_fault(topo.failed, topology=topo.id)
+            except BaseException:  # noqa: BLE001
+                pass
         if topo.failed is not None:
             topo.future.set_exception(topo.failed)
         else:
@@ -1183,12 +1269,15 @@ class Executor:
         for g in groups:
             sched_state.add_group(g)
         sched_state.measured_load = measured
-        self.scheduler.update(sched_state, SchedulerUpdate(),
-                              graph=topo.graph)
+        delta = self.scheduler.update(sched_state, SchedulerUpdate(),
+                                      graph=topo.graph)
         apply_assignment(topo.graph, groups, self.devices,
                          sched_state.assignment)
         self._free_moved_blocks(topo.graph, old_device)
-        self._replacements += 1
+        self._replacements.inc()
+        if self._obs is not None:
+            self._obs.event("replacement", moved=len(delta),
+                            iteration=topo.iteration)
 
     def _free_moved_blocks(self, graph: Heteroflow,
                            old_device: dict[int, Any]) -> None:

@@ -26,14 +26,17 @@ import jax
 
 __all__ = ["DispatchLane", "ScopedDeviceContext", "LaneRegistry",
            "device_key", "bin_labels", "dedup_labels", "execution_target",
-           "COPY_LANE", "COMPUTE_LANE", "DEFAULT_LANE_DEPTH"]
+           "lane_kind", "COPY_LANE", "COMPUTE_LANE", "HOST_LANE",
+           "DEFAULT_LANE_DEPTH"]
 
 #: Lane classes a device bin multiplexes, mirroring the paper's per-device
 #: streams: one lane serializes memory ops (H2D pulls / D2H pushes), one
 #: serializes kernel launches.  ``repro.sched.simulator`` models exactly
-#: these two lanes per bin.
+#: these two lanes per bin.  Host tasks occupy no device lane; the
+#: simulator and the timeline exporter file them under ``HOST_LANE``.
 COPY_LANE = "copy"
 COMPUTE_LANE = "compute"
+HOST_LANE = "host"
 
 #: Default number of concurrently-in-flight ops a bin admits.  With one
 #: copy lane and one compute lane each serializing their own class, depth
@@ -41,6 +44,21 @@ COMPUTE_LANE = "compute"
 #: Heteroflow §IV); depth 1 degenerates to fully serialized dispatch —
 #: the conservative model the simulator used before lanes existed.
 DEFAULT_LANE_DEPTH = 2
+
+
+def lane_kind(task_type: Any) -> str:
+    """Lane class a task type occupies on its bin: pulls/pushes ride the
+    copy lane, kernels the compute lane, everything else (host tasks,
+    placeholders) the host lane.  Accepts a ``TaskType`` enum or its
+    string value — shared by the simulator's lane model and the
+    ``repro.obs`` timeline exporter so measured and simulated rows land
+    on matching lanes."""
+    v = getattr(task_type, "value", task_type)
+    if v in ("pull", "push"):
+        return COPY_LANE
+    if v == "kernel":
+        return COMPUTE_LANE
+    return HOST_LANE
 
 
 def device_key(device: Any) -> str:

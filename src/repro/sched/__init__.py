@@ -53,8 +53,10 @@ arrival time and reports per-request TTFT/completion
 (``SimReport.request_latency``); ``sched.online`` replays arrival
 traces through the update loop (``online_report``) and scores them
 against the ``static_batching_latency`` strawman.  The old
-``reschedule()`` / ``migrate_top_k=`` entry points are deprecated
-shims over ``update()`` (see docs/scheduling.md "Online scheduling").
+``reschedule()`` / ``migrate_top_k=`` entry points were removed in
+PR 9 after their two-cycle deprecation — drive ``update()`` with
+``SchedulerState.measured_load`` instead (migration guide in
+docs/scheduling.md "Online scheduling").
 
 Failure tolerance (PR 8): ``simulate(..., faults=FaultSchedule.kill(t,
 bin))`` injects kill/slow/join events at simulated times with honest

@@ -22,7 +22,6 @@ the paper's invariants hold for all of them:
 from __future__ import annotations
 
 import abc
-import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Hashable, Mapping, Sequence
 
@@ -174,7 +173,7 @@ class SchedulerUpdate:
     (``new_bins`` / ``retired_bins`` — estee's ``new_workers``, both
     directions).  An empty update with
     :attr:`SchedulerState.measured_load` set is a rebalance request —
-    the event-loop spelling of the deprecated :meth:`Scheduler.reschedule`.
+    the event-loop spelling of the removed ``Scheduler.reschedule()``.
     """
 
     new_tasks: tuple = ()
@@ -426,7 +425,8 @@ class Scheduler(abc.ABC):
     contract packs resident arena *bytes* against group costs, which is
     commensurate under the default cost metric (pull cost = span bytes).
     Callers using a custom cost scale should rescale their loads the way
-    :meth:`reschedule` rescales measured seconds.
+    the measured-load rebalance rescales measured seconds
+    (:meth:`_rebalance`).
     """
 
     #: registry key; subclasses must override.
@@ -466,10 +466,11 @@ class Scheduler(abc.ABC):
         booked → bins retire (their unfinished groups are displaced) →
         new + displaced groups are placed incrementally via
         :meth:`place_update`.  An *empty* event with
-        ``state.measured_load`` set triggers a rebalance instead (the
-        event-loop form of the deprecated :meth:`reschedule`):
+        ``state.measured_load`` set triggers a rebalance instead:
         hot-group migration when ``state.migrate_top_k > 0``, else a
-        full repack seeded with the rescaled measured load.
+        full repack seeded with the rescaled measured load (this
+        event-loop form replaced the removed ``reschedule()`` method —
+        migration guide in docs/scheduling.md).
 
         ``graph`` is optional context: offline callers pass the full
         graph (exact upward ranks for HEFT); online callers usually
@@ -532,46 +533,6 @@ class Scheduler(abc.ABC):
             state.record(g, idx)
             delta[g.root] = idx
         return delta
-
-    def reschedule(
-        self,
-        graph: Heteroflow,
-        bins: Sequence[Any],
-        cost_fn: CostFn = estimate_node_cost,
-        *,
-        measured_load: Mapping[Any, float],
-        migrate_top_k: int = 0,
-    ) -> dict[int, Any]:
-        """Deprecated: dynamic re-placement between graph iterations.
-
-        .. deprecated::
-            Use :meth:`update` with an empty :class:`SchedulerUpdate`
-            and ``state.measured_load`` / ``state.migrate_top_k`` set —
-            a reschedule *is* an update with measured-load state and no
-            new tasks.  See the migration guide in docs/scheduling.md.
-            This shim delegates and will be removed two PRs after the
-            online-scheduling release.
-
-        ``measured_load`` maps each bin — by object, or by bin *index*
-        when bin objects are duplicated/equal and an object key would
-        collapse slots — to the busy *seconds* the executor observed on
-        it since the last (re-)placement.  Seconds are rescaled into
-        cost units (total group cost / total measured seconds) before
-        seeding the repack.  ``migrate_top_k > 0`` moves at most ``k``
-        hot groups instead of repacking (see :meth:`update`).
-        """
-        warnings.warn(
-            "Scheduler.reschedule() is deprecated; drive Scheduler.update() "
-            "with SchedulerState.measured_load instead (see the online-"
-            "scheduling migration guide in docs/scheduling.md)",
-            DeprecationWarning, stacklevel=2)
-        groups = build_groups(graph, cost_fn)
-        state = SchedulerState(bins, migrate_top_k=migrate_top_k)
-        for g in groups:
-            state.add_group(g)
-        state.measured_load = measured_load
-        self.update(state, SchedulerUpdate(), graph=graph)
-        return apply_assignment(graph, groups, bins, state.assignment)
 
     def _rebalance(
         self,

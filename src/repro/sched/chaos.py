@@ -110,9 +110,14 @@ class ChaosPlan:
         return cls(tuple(events), seed=seed)
 
     # ------------------------------------------------------------------
-    def runner(self) -> "ChaosRunner":
-        """Fresh mutable trigger-poller for one executor run."""
-        return ChaosRunner(self.ordered())
+    def runner(self, *, obs: Any = None) -> "ChaosRunner":
+        """Fresh mutable trigger-poller for one executor run.
+
+        ``obs`` — an optional ``repro.obs.SpanRecorder`` — receives a
+        ``chaos_trigger`` instant event per fired trigger, so injected
+        faults show up on the run's timeline next to the recovery work
+        they caused."""
+        return ChaosRunner(self.ordered(), obs=obs)
 
     def fault_schedule(
         self,
@@ -148,10 +153,14 @@ class ChaosRunner:
     ``due(n_done)`` pops and returns every event whose trigger count has
     been reached; the caller applies them (``Executor.fail_bin`` /
     ``Executor.slow_bin``).  One runner per run: triggers fire once.
+    Each fired trigger is also recorded as a ``chaos_trigger`` instant
+    on the attached flight recorder (when one was passed to
+    :meth:`ChaosPlan.runner`).
     """
 
-    def __init__(self, events: Sequence[ChaosEvent]):
+    def __init__(self, events: Sequence[ChaosEvent], *, obs: Any = None):
         self._events = list(events)
+        self._obs = obs
 
     def __bool__(self) -> bool:
         return bool(self._events)
@@ -160,6 +169,11 @@ class ChaosRunner:
         fired = []
         while self._events and self._events[0].after_tasks <= n_done:
             fired.append(self._events.pop(0))
+        if fired and self._obs is not None:
+            for ev in fired:
+                self._obs.event("chaos_trigger", bin=ev.bin,
+                                action=ev.action, factor=ev.factor,
+                                after_tasks=ev.after_tasks)
         return fired
 
 

@@ -381,7 +381,7 @@ class Heft(Scheduler):
         # cost units to seconds by the same rule EFT charges for kernels.
         # Per the Scheduler contract, initial_load shares cost_fn's units
         # (arena bytes under the default byte-based cost metric; rescaled
-        # cost units from reschedule's measured-load path).  Availability
+        # cost units from the measured-load rebalance path).  Availability
         # is tracked per LANE when the model overlaps (lane_depth >= 2):
         # a group's pulls queue on the copy lane, its kernels on the
         # compute lane — the same two clocks the simulator advances.

@@ -69,9 +69,15 @@ dimension: an optional ``memory_bytes`` budget on bin descriptors
 executor arena **spill/refill** records —
 ``{"type": "spill"|"refill", "bin": label, "bytes": n,
 "start": t0, "end": t1}`` — which ``CostModel.fit`` uses to calibrate
-``spill_bandwidth``.  Version-1…-4 traces still load; readers treat
-the missing fields as 0 / plain device bins / no tags / no stages /
-no budgets / no events.
+``spill_bandwidth``.  Version 6 adds correlation ids to those events:
+``"node"`` — the node id whose arena block was spilled/refilled — and
+``"span"`` — the node id of the task *being invoked* when the arena
+round trip fired (the kernel whose allocation forced the eviction, or
+whose operand conversion pulled the block back), both omitted when
+unknown, so the ``repro.obs`` timeline can join arena activity to the
+task that triggered it.  Version-1…-5 traces still load; readers
+treat the missing fields as 0 / plain device bins / no tags / no
+stages / no budgets / no events / no correlation ids.
 """
 from __future__ import annotations
 
@@ -87,13 +93,14 @@ from repro.core.placement import _nbytes
 __all__ = ["TaskRecord", "TaskProfiler", "node_bytes", "producer_bytes",
            "cross_bin_bytes", "load_trace"]
 
-TRACE_VERSION = 5
+TRACE_VERSION = 6
 #: versions load_trace accepts (v1 lacks xfer_bytes — readers default it
 #: 0; v1/v2 lack meta.bin_descriptors — readers assume plain device
 #: bins; v1-v3 lack per-record stage ids — readers assume no stages;
 #: v1-v4 lack bin memory budgets and spill/refill events — readers
-#: assume unlimited memory and no spills)
-SUPPORTED_TRACE_VERSIONS = (1, 2, 3, 4, 5)
+#: assume unlimited memory and no spills; v5 events lack node/span
+#: correlation ids — readers treat arena events as uncorrelated)
+SUPPORTED_TRACE_VERSIONS = (1, 2, 3, 4, 5, 6)
 
 
 def node_bytes(node: Node) -> int:
@@ -205,15 +212,27 @@ class TaskProfiler:
             self._records.append(rec)
 
     def record_event(self, type: str, *, bin: str | None, bytes: int,
-                     start: float, end: float) -> None:
+                     start: float, end: float, node: int | None = None,
+                     span: int | None = None) -> None:
         """Record a non-node runtime event (v5): arena ``spill`` /
         ``refill`` round trips the executor's memory-pressure path
         performs.  Shares the records' monotonic clock and is rebased
-        with them at export."""
+        with them at export.
+
+        ``node`` (v6) is the node id whose arena block moved; ``span``
+        is the node id of the task being invoked when the round trip
+        fired — together they join an arena event to the kernel that
+        triggered it.  Both optional: omitted keys keep the event
+        readable by v5 consumers.
+        """
+        ev = {"type": str(type), "bin": bin, "bytes": int(bytes),
+              "start": float(start), "end": float(end)}
+        if node is not None:
+            ev["node"] = node
+        if span is not None:
+            ev["span"] = span
         with self._lock:
-            self._events.append({"type": str(type), "bin": bin,
-                                 "bytes": int(bytes),
-                                 "start": float(start), "end": float(end)})
+            self._events.append(ev)
 
     def finalize(self, executor: Any) -> None:
         """Snapshot executor metadata + per-device lane counters.

@@ -53,7 +53,8 @@ from typing import Any, Callable, Mapping, Sequence
 
 from repro.core.graph import Heteroflow, Node, TaskType
 from repro.core.placement import _nbytes, estimate_node_cost
-from repro.core.streams import COMPUTE_LANE, COPY_LANE, DEFAULT_LANE_DEPTH
+from repro.core.streams import (COMPUTE_LANE, COPY_LANE, DEFAULT_LANE_DEPTH,
+                                HOST_LANE, lane_kind)
 
 from .base import (SchedulerState, SchedulerUpdate, bin_index, build_groups,
                    get_scheduler, node_footprint)
@@ -589,11 +590,12 @@ class SimReport:
 
 
 _HOST = -1  # bin index for the worker-pool-only resource
-_HOST_LANE = "host"
+_HOST_LANE = HOST_LANE
 
-#: node type -> lane class on its bin
-_LANE_OF = {TaskType.PULL: COPY_LANE, TaskType.PUSH: COPY_LANE,
-            TaskType.KERNEL: COMPUTE_LANE}
+#: node type -> lane class on its bin (the shared streams.lane_kind
+#: rule, so simulated schedules and obs timelines agree on lane names)
+_LANE_OF = {t: lane_kind(t) for t in
+            (TaskType.PULL, TaskType.PUSH, TaskType.KERNEL)}
 
 
 class _Replay:
@@ -650,6 +652,7 @@ def simulate(
     arrivals: "ArrivalProcess | Sequence[float] | None" = None,
     faults: "FaultSchedule | None" = None,
     fault_policy: Any = "balanced",
+    metrics: Any = None,
 ) -> SimReport:
     """Simulate ``graph`` under a ``{node.id: bin}`` placement.
 
@@ -679,6 +682,11 @@ def simulate(
     (:attr:`SimReport.n_reexecuted` / :attr:`SimReport.recovery_seconds`).
     Killing the last live bin raises :class:`ValueError`.
     ``faults=None`` leaves every code path bit-identical.
+
+    ``metrics`` — an optional ``repro.obs.MetricsRegistry`` — receives
+    the report's headline figures via :func:`publish_report` after the
+    simulation completes; the simulated numbers themselves are
+    untouched (instrumentation never perturbs the model).
     """
     model = cost_model or CostModel()
     if faults is not None and replay is not None:
@@ -1089,7 +1097,7 @@ def simulate(
             ttft = first_kernel.get(c, first_any[c]) - arr
             request_latency.append({"arrival": arr, "ttft": ttft,
                                     "complete": last[c] - arr})
-    return SimReport(
+    report = SimReport(
         makespan=makespan,
         busy=busy,
         utilization=util,
@@ -1107,3 +1115,25 @@ def simulate(
         n_reexecuted=n_reexecuted,
         recovery_seconds=recovery_seconds,
     )
+    if metrics is not None:
+        publish_report(metrics, report)
+    return report
+
+
+def publish_report(metrics: Any, report: SimReport) -> None:
+    """Publish a :class:`SimReport` into a ``repro.obs.MetricsRegistry``
+    — the simulator's half of the shared observability surface.  Gauges
+    carry the latest run's figures, counters accumulate across runs, and
+    the ``sim_task_seconds`` histogram collects per-interval durations
+    from the schedule (p50/p99 via the registry)."""
+    metrics.counter("sim_runs").inc()
+    metrics.gauge("sim_makespan_s").set(report.makespan)
+    metrics.gauge("sim_host_busy_s").set(report.host_busy)
+    metrics.counter("sim_transfers").inc(report.n_transfers)
+    metrics.counter("sim_transfer_seconds").inc(report.transfer_seconds)
+    metrics.counter("sim_spills").inc(report.n_spills)
+    metrics.counter("sim_reexecuted").inc(report.n_reexecuted)
+    metrics.histogram("sim_task_seconds").extend(
+        end - start for _, _, _, start, end in report.schedule)
+    if report.divergence is not None:
+        metrics.gauge("sim_divergence").set(report.divergence)

@@ -29,6 +29,14 @@ to the queue head).  :meth:`submit` / :meth:`poll` / :meth:`step` are
 the public surface; per-request TTFT and inter-token latency feed the
 p50/p99 columns of :meth:`stats` (injectable ``clock=`` for tests).
 
+**Observability (PR 9)**: engine tallies live in a
+:class:`~repro.obs.MetricsRegistry` (``engine.metrics``) — counters for
+ticks/preemptions/kv_moves, histograms for TTFT and inter-token
+latency — and :meth:`stats` is a back-compat view over it.  Pass
+``obs=`` a :class:`~repro.obs.SpanRecorder` to get instant events for
+preemptions, KV migrations, and bin join/retire/fail on the same
+timeline as the executor's spans.
+
 KV capacity is governed per bin by the :class:`PagedKVArena` buddy pool —
 a request is admitted only when its bin's arena can host its page run
 (otherwise it queues), the vLLM admission rule built on the paper's
@@ -65,6 +73,7 @@ from ..configs.base import ModelConfig
 from ..core import Executor, Heteroflow
 from ..core.memory import OutOfMemory
 from ..models import transformer
+from ..obs import MetricsRegistry
 from ..sched import (
     CostModel,
     Scheduler,
@@ -73,7 +82,6 @@ from ..sched import (
     TaskGroup,
     build_groups,
     get_scheduler,
-    percentile,
 )
 from .kv_cache import PagedKVArena
 
@@ -140,7 +148,8 @@ class ServingEngine:
                  bins: "Sequence[Any] | int | None" = None,
                  scheduler: "Scheduler | str" = "heft",
                  cost_model: CostModel | None = None,
-                 clock: Callable[[], float] | None = None):
+                 clock: Callable[[], float] | None = None,
+                 obs: Any = None):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -188,12 +197,16 @@ class ServingEngine:
             lambda p, t, c: transformer.prefill(cfg, p, t, c))
         self._decode = jax.jit(
             lambda p, t, c: transformer.decode_step(cfg, p, t, c))
-        self.ticks = 0
-        self.preemptions = 0
-        self.kv_moves = 0
-        self.kv_move_seconds = 0.0
-        self._ttft: list[float] = []
-        self._itl: list[float] = []
+        self._obs = obs
+        #: public registry — counters/histograms the engine publishes
+        #: into; :meth:`stats` is a back-compat view over it
+        self.metrics = MetricsRegistry()
+        self._ticks = self.metrics.counter("ticks")
+        self._preemptions = self.metrics.counter("preemptions")
+        self._kv_moves = self.metrics.counter("kv_moves")
+        self._kv_move_seconds = self.metrics.counter("kv_move_seconds")
+        self._ttft = self.metrics.histogram("ttft_s")
+        self._itl = self.metrics.histogram("itl_s")
         self._last_token_s: dict[int, float] = {}
 
     def _new_arena(self, n_pages: int) -> PagedKVArena:
@@ -204,6 +217,23 @@ class ServingEngine:
     def _kv_bytes_per_token(cfg: ModelConfig) -> int:
         per_layer = 2 * cfg.n_kv_heads * cfg.head_dim_ * 2  # k+v bf16
         return max(1, per_layer * cfg.n_layers)
+
+    # registry-backed tallies, kept as public attributes for back-compat
+    @property
+    def ticks(self) -> int:
+        return self._ticks.value
+
+    @property
+    def preemptions(self) -> int:
+        return self._preemptions.value
+
+    @property
+    def kv_moves(self) -> int:
+        return self._kv_moves.value
+
+    @property
+    def kv_move_seconds(self) -> float:
+        return self._kv_move_seconds.value
 
     @property
     def arena(self) -> PagedKVArena:
@@ -304,6 +334,13 @@ class ServingEngine:
         gone = drained + failed
         if not (new or gone):
             return
+        if self._obs is not None:
+            for b in new:
+                self._obs.event("join_bin", bin=b)
+            for b in drained:
+                self._obs.event("retire_bin", bin=b)
+            for b in failed:
+                self._obs.event("fail_bin", bin=b)
         state = self._sched_state
         gone_idx = {i for i in state.live
                     if state.bins[i] in gone or i in gone}
@@ -354,11 +391,14 @@ class ServingEngine:
             req.id, req.total_tokens,
             reserve_tokens=max(0, req.max_new_tokens - len(req.generated)))
         state = self._sched_state
-        self.kv_moves += 1
-        self.kv_move_seconds += self.cost_model.transfer_time(
-            req.total_tokens * self.kv_bytes_per_token,
-            state.bins[src], state.bins[dest])
+        moved_bytes = req.total_tokens * self.kv_bytes_per_token
+        self._kv_moves.inc()
+        self._kv_move_seconds.inc(self.cost_model.transfer_time(
+            moved_bytes, state.bins[src], state.bins[dest]))
         self._home[req.id] = dest
+        if self._obs is not None:
+            self._obs.event("kv_move", bin=dest, lane="arena",
+                            bytes=moved_bytes, request=req.id, src=src)
         return True
 
     def _request_groups(self, req: Request) -> tuple[TaskGroup, TaskGroup]:
@@ -405,7 +445,7 @@ class ServingEngine:
 
     def _tick(self) -> bool:
         """One engine iteration: admit → prefill news → decode actives."""
-        self.ticks += 1
+        self._ticks.inc()
         self._apply_bin_events()
         # 1. admission (scheduler-placed, arena-gated)
         with self._lock:
@@ -452,7 +492,7 @@ class ServingEngine:
                     req.generated.append(int(jnp.argmax(logits[0])))
                     now = self._clock()
                     if req.first_token_s is None:
-                        self._ttft.append(now - req.arrival_s)
+                        self._ttft.observe(now - req.arrival_s)
                         req._advance(first_token_s=now)
                     self._last_token_s[req.id] = now
                     req._advance(state=DECODING)
@@ -477,7 +517,7 @@ class ServingEngine:
             now = self._clock()
             last = self._last_token_s.get(req.id)
             if last is not None:
-                self._itl.append(now - last)
+                self._itl.observe(now - last)
             self._last_token_s[req.id] = now
             if not self._grow(req):
                 continue                          # req went back to queue
@@ -527,6 +567,10 @@ class ServingEngine:
     def _preempt(self, victim: Request) -> None:
         """Release ``victim``'s pages and reset its generated tokens —
         greedy decoding recomputes them identically on re-admission."""
+        if self._obs is not None:
+            self._obs.event("preempt", bin=self._home.get(victim.id),
+                            request=victim.id,
+                            generated=len(victim.generated))
         with self._lock:
             arena = self._arena_of(victim)
             if victim.id in arena.tables:
@@ -540,7 +584,7 @@ class ServingEngine:
                     self._slots[i] = None
             self._finish_groups(victim)
             self._queue.appendleft(victim)
-            self.preemptions += 1
+            self._preemptions.inc()
 
     def _finish_groups(self, req: Request) -> None:
         """Release the request's groups from the scheduler's active-load
@@ -564,26 +608,44 @@ class ServingEngine:
 
     # -- stats --------------------------------------------------------------
     def stats(self) -> dict[str, Any]:
+        """Back-compat metrics view (same keys/values as pre-registry).
+
+        Derived occupancy numbers are published into the registry as
+        gauges on the way out, so ``engine.metrics.snapshot()`` carries
+        the full picture a scrape needs; the TTFT/ITL percentiles come
+        from the registry histograms (same nearest-rank rule as the old
+        list-based implementation, so the values are bit-identical).
+        """
         live = sorted(self._sched_state.live)
         utils = [self._arenas[i].utilization for i in live
                  if i in self._arenas]
         frags = [self._arenas[i].fragmentation() for i in live
                  if i in self._arenas]
+        m = self.metrics
+        m.gauge("queue").set(len(self._queue))
+        m.gauge("active").set(sum(s is not None for s in self._slots))
+        m.gauge("completed").set(len(self.completed))
+        m.gauge("bins").set(len(live))
+        m.gauge("kv_utilization").set(
+            sum(utils) / len(utils) if utils else 0.0)
+        m.gauge("kv_fragmentation").set(
+            sum(frags) / len(frags) if frags else 0.0)
+        m.gauge("page_grows").set(sum(self._arenas[i].grows for i in live
+                                      if i in self._arenas))
         return {
-            "ticks": self.ticks,
-            "queue": len(self._queue),
-            "active": sum(s is not None for s in self._slots),
-            "completed": len(self.completed),
-            "bins": len(live),
-            "kv_utilization": sum(utils) / len(utils) if utils else 0.0,
-            "kv_fragmentation": sum(frags) / len(frags) if frags else 0.0,
-            "page_grows": sum(self._arenas[i].grows for i in live
-                              if i in self._arenas),
-            "preemptions": self.preemptions,
-            "kv_moves": self.kv_moves,
-            "kv_move_seconds": self.kv_move_seconds,
-            "ttft_p50_s": percentile(self._ttft, 50) if self._ttft else 0.0,
-            "ttft_p99_s": percentile(self._ttft, 99) if self._ttft else 0.0,
-            "itl_p50_s": percentile(self._itl, 50) if self._itl else 0.0,
-            "itl_p99_s": percentile(self._itl, 99) if self._itl else 0.0,
+            "ticks": self._ticks.value,
+            "queue": m.gauge("queue").value,
+            "active": m.gauge("active").value,
+            "completed": m.gauge("completed").value,
+            "bins": m.gauge("bins").value,
+            "kv_utilization": m.gauge("kv_utilization").value,
+            "kv_fragmentation": m.gauge("kv_fragmentation").value,
+            "page_grows": m.gauge("page_grows").value,
+            "preemptions": self._preemptions.value,
+            "kv_moves": self._kv_moves.value,
+            "kv_move_seconds": self._kv_move_seconds.value,
+            "ttft_p50_s": self._ttft.percentile(50),
+            "ttft_p99_s": self._ttft.percentile(99),
+            "itl_p50_s": self._itl.percentile(50),
+            "itl_p99_s": self._itl.percentile(99),
         }

@@ -174,3 +174,35 @@ def test_check_baseline_flags_chaos_mismatch():
     assert any("chaos" in f for f in sched_bench.check_baseline(cur, base))
     # absent on both sides means off — older baselines stay comparable
     assert sched_bench.check_baseline(_payload({"chain": 1.0}), base) == []
+
+
+def test_obs_off_bit_identical_row(capsys):
+    """Without --timeline, observability must be provably inert: the
+    gated policy's makespans equal the checked-in baseline EXACTLY."""
+    rc = sched_bench.main(["--shapes", "chain", "--policies", "heft"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "check,obs_off_bit_identical,PASS" in out
+
+
+def test_timeline_study_writes_perfetto_trace(capsys, tmp_path):
+    """--timeline runs the measured-vs-simulated study: the artifact is
+    a schema-valid Chrome trace holding both process groups, and the
+    stdout rows report per-bin divergence."""
+    from repro.obs import validate_timeline
+
+    path = tmp_path / "timeline.json"
+    rc = sched_bench.main(["--random-seeds", "2",
+                           "--timeline", str(path)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert any(line.startswith("timeline,makespan,")
+               for line in out.splitlines())
+    assert f"timeline,{path}" in out
+    # the obs-off row cannot run when the knob is on
+    assert "obs_off_bit_identical" not in out
+    tl = json.loads(path.read_text())
+    assert validate_timeline(tl) == []
+    procs = [e["args"]["name"] for e in tl["traceEvents"]
+             if e.get("ph") == "M" and e["name"] == "process_name"]
+    assert len(procs) == 2 * len(set(procs))   # measured + simulated twin

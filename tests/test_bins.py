@@ -289,7 +289,7 @@ def test_executor_runs_mixed_bin_kinds_end_to_end():
 def test_trace_v3_descriptors_roundtrip(tmp_path):
     prof, bins, G, _, _ = _run_mixed_bins()
     trace = prof.trace()
-    assert trace["version"] == 5
+    assert trace["version"] == 6
     descs = trace["meta"]["bin_descriptors"]
     assert [d["kind"] for d in descs] == ["device", "host", "mesh"]
     assert descs[2]["axis_shape"] == {"data": 1, "model": 1}
@@ -378,8 +378,23 @@ def test_mesh_replay_uses_slice_lane_widths():
 
 
 # ----------------------------------------------------------------------
-# hot-group migration (Scheduler.reschedule migrate_top_k)
+# hot-group migration (measured-load rebalance, migrate_top_k)
 # ----------------------------------------------------------------------
+def _reschedule(sched, G, bins, cost_fn, *, measured_load,
+                migrate_top_k=0):
+    """Measured-load rebalance via the event loop — the migration-guide
+    recipe (docs/scheduling.md) that replaced the removed
+    ``Scheduler.reschedule()`` shim."""
+    from repro.sched import SchedulerState, SchedulerUpdate, apply_assignment
+    groups = build_groups(G, cost_fn)
+    state = SchedulerState(bins, migrate_top_k=migrate_top_k)
+    for g in groups:
+        state.add_group(g)
+    state.measured_load = measured_load
+    sched.update(state, SchedulerUpdate(), graph=G)
+    return apply_assignment(G, groups, bins, state.assignment)
+
+
 def _eight_placed(policy="balanced"):
     G = Heteroflow()
     for i in range(8):
@@ -393,16 +408,16 @@ def _eight_placed(policy="balanced"):
 def test_migrate_near_equal_loads_do_not_churn(policy):
     G, sched = _eight_placed(policy)
     before = {n.id: n.device for n in G.nodes}
-    pl = sched.reschedule(G, ["d0", "d1"], MODEL.cost_fn,
-                          measured_load={0: 1.0, 1: 1.05},
-                          migrate_top_k=4)
+    pl = _reschedule(sched, G, ["d0", "d1"], MODEL.cost_fn,
+                     measured_load={0: 1.0, 1: 1.05},
+                     migrate_top_k=4)
     assert {n.id: n.device for n in G.nodes} == before
     assert pl == {nid: d for nid, d in before.items()}
     # full repacking under the same window is free to churn — the
     # migration mode is what pins the placement
     G2, sched2 = _eight_placed(policy)
-    pl2 = sched2.reschedule(G2, ["d0", "d1"], MODEL.cost_fn,
-                            measured_load={0: 1.0, 1: 1.05})
+    pl2 = _reschedule(sched2, G2, ["d0", "d1"], MODEL.cost_fn,
+                      measured_load={0: 1.0, 1: 1.05})
     assert len(pl2) == len(pl)
 
 
@@ -413,9 +428,9 @@ def test_migrate_moves_at_most_k_hottest_groups():
     hottest_on_d0 = max(
         (g for g in groups if g.nodes[0].device == "d0"),
         key=lambda g: g.cost)
-    pl = sched.reschedule(G, ["d0", "d1"], MODEL.cost_fn,
-                          measured_load={0: 10.0, 1: 0.5},
-                          migrate_top_k=1)
+    pl = _reschedule(sched, G, ["d0", "d1"], MODEL.cost_fn,
+                     measured_load={0: 10.0, 1: 0.5},
+                     migrate_top_k=1)
     moved = [nid for nid, d in pl.items() if d != before[nid]]
     # exactly the hottest d0 group moved, nothing else
     assert set(moved) == {t.id for t in hottest_on_d0.nodes}
@@ -432,9 +447,9 @@ def test_migrate_honors_capability_tags():
     nodes = {n.name: n for n in G.nodes}
     assert nodes["sh"].device is bins[0]
     # the mesh bin is overloaded, but the sharded group cannot leave it
-    pl = sched.reschedule(G, bins, MODEL.cost_fn,
-                          measured_load={0: 10.0, 1: 0.0},
-                          migrate_top_k=2)
+    pl = _reschedule(sched, G, bins, MODEL.cost_fn,
+                     measured_load={0: 10.0, 1: 0.0},
+                     migrate_top_k=2)
     assert pl[nodes["sh"].id] is bins[0]
 
 
@@ -442,8 +457,8 @@ def test_migrate_without_prior_placement_falls_back_to_repack():
     G = Heteroflow()
     for i in range(4):
         _kern(G, f"k{i}", 1.0)
-    pl = get_scheduler("balanced").reschedule(
-        G, ["d0", "d1"], MODEL.cost_fn,
+    pl = _reschedule(
+        get_scheduler("balanced"), G, ["d0", "d1"], MODEL.cost_fn,
         measured_load={0: 5.0, 1: 0.0}, migrate_top_k=2)
     assert len(pl) == len(G)
     assert set(pl.values()) <= {"d0", "d1"}

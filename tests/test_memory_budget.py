@@ -203,7 +203,7 @@ def test_profiler_events_rebase_and_roundtrip(tmp_path):
     prof.record_event("spill", bin="d0", bytes=1024, start=5.0, end=5.5)
     prof.record_event("refill", bin="d0", bytes=1024, start=6.0, end=6.5)
     tr = prof.trace()
-    assert tr["version"] == 5
+    assert tr["version"] == 6
     evs = tr["events"]
     assert [e["type"] for e in evs] == ["spill", "refill"]
     assert evs[0]["start"] == 0.0                 # rebased to t=0

@@ -5,9 +5,10 @@ Covers the estee-style update loop: incremental placement parity with
 one-shot schedule() (any interleaving of SchedulerUpdate events over a
 union graph must land every group on the same bin), bin join/drain
 deltas, policy-private state persistence (HEFT clocks, round-robin
-cursor, random rng), the deprecated reschedule() shim, arrival-mode
-simulation (per-request TTFT), and the headline latency claim: online
-HEFT beats static batching on p99 TTFT under Poisson traffic.
+cursor, random rng), the closed reschedule()-shim deprecation cycle,
+arrival-mode simulation (per-request TTFT), and the headline latency
+claim: online HEFT beats static batching on p99 TTFT under Poisson
+traffic.
 """
 import sys
 
@@ -203,40 +204,16 @@ def test_retire_with_in_flight_finish_same_update():
 
 # -- deprecated shims -----------------------------------------------------
 
-def test_reschedule_shim_warns_and_delegates():
-    G = build_fanout(width=5)
-    sched = get_scheduler("balanced")
-    pl = sched.schedule(G, BINS)
-    for n in G.nodes:                     # write back the prior placement
-        if n.id in pl:
-            n.bin_key = pl[n.id]
-    measured = {b: 1.0 for b in BINS}
-    with pytest.warns(DeprecationWarning, match="update"):
-        moved = sched.reschedule(G, BINS, measured_load=measured,
-                                 migrate_top_k=2)
-    assert isinstance(moved, dict)
-    assert all(v in BINS for v in moved.values())
-
-
-#: release cycle 2 of 2 for the PR 7 ``reschedule()``/``migrate_top_k=``
-#: DeprecationWarning shims (cycle 1 announced in CHANGES.md, ISSUE 8):
-#: once this date passes, delete the shims and this check with them.
-_SHIM_REMOVE_BY = "2027-02-01"
-
-
-def test_reschedule_shim_remove_by_date():
-    """Remove-by-date check: the shim must still WARN (not silently
-    work, not be gone early) until its scheduled removal — and this
-    test starts failing once the removal date arrives, forcing the
-    cleanup instead of letting the deprecation rot."""
-    import datetime
-    assert hasattr(get_scheduler("balanced"), "reschedule"), (
-        "shim removed early: also delete this check and close the cycle")
-    assert datetime.date.today() < datetime.date.fromisoformat(
-        _SHIM_REMOVE_BY), (
-        f"release cycle 2 of 2 reached ({_SHIM_REMOVE_BY}): delete the "
-        f"reschedule()/migrate_top_k= shims in sched/base.py, their "
-        f"tests, and the CHANGES.md cycle note")
+def test_reschedule_shim_is_gone():
+    """Release cycle 2 of 2 (PR 9): the PR 7 ``reschedule()`` /
+    ``migrate_top_k=`` DeprecationWarning shim has been deleted — the
+    event-loop spelling (``update()`` with ``state.measured_load``) is
+    the only entry point.  Regressing the shim back in re-opens a
+    closed deprecation cycle."""
+    assert not hasattr(get_scheduler("balanced"), "reschedule"), (
+        "reschedule() shim resurrected: the deprecation cycle closed in "
+        "PR 9 — drive Scheduler.update() with SchedulerState."
+        "measured_load instead (migration guide in docs/scheduling.md)")
 
 
 # -- arrivals + latency ---------------------------------------------------

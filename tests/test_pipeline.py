@@ -345,7 +345,7 @@ def _profiled_pipeline_run(workers=1):
 def test_trace_v4_records_stages_and_link_descriptors(tmp_path):
     G, prof, pool, ex = _profiled_pipeline_run()
     trace = prof.trace()
-    assert trace["version"] == 5
+    assert trace["version"] == 6
     descs = trace["meta"]["bin_descriptors"]
     assert [d["kind"] for d in descs] == ["stage", "stage"]
     for s, d in enumerate(descs):
@@ -481,6 +481,20 @@ def test_fit_calibrates_stage_link_bandwidth():
 # ----------------------------------------------------------------------
 # dynamic re-placement keeps stages atomic
 # ----------------------------------------------------------------------
+def _reschedule(sched, G, bins, *, measured_load, migrate_top_k=0):
+    """Measured-load rebalance via the event loop — the migration-guide
+    recipe (docs/scheduling.md) that replaced the removed
+    ``Scheduler.reschedule()`` shim."""
+    from repro.sched import SchedulerState, SchedulerUpdate, apply_assignment
+    groups = build_groups(G)
+    state = SchedulerState(bins, migrate_top_k=migrate_top_k)
+    for g in groups:
+        state.add_group(g)
+    state.measured_load = measured_load
+    sched.update(state, SchedulerUpdate(), graph=G)
+    return apply_assignment(G, groups, bins, state.assignment)
+
+
 @pytest.mark.parametrize("top_k", [1, 2])
 def test_reschedule_migration_is_stage_atomic(top_k):
     pool = stage_bins([f"d{i}" for i in range(3)])
@@ -488,8 +502,9 @@ def test_reschedule_migration_is_stage_atomic(top_k):
     sched = get_scheduler("balanced")
     sched.schedule(G, pool)
     # heavily imbalanced measured window forces migration pressure
-    pl = sched.reschedule(G, pool, measured_load={0: 100.0, 1: 1.0, 2: 1.0},
-                          migrate_top_k=top_k)
+    pl = _reschedule(sched, G, pool,
+                     measured_load={0: 100.0, 1: 1.0, 2: 1.0},
+                     migrate_top_k=top_k)
     by_stage = {}
     for n in G.nodes:
         sid = n.state.get("stage")

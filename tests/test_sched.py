@@ -266,7 +266,7 @@ def test_profiler_trace_format_and_roundtrip(tmp_path):
     G, ex = _profiled_run(12, seed=5, profiler=prof)
     assert len(prof.records) == len(G)          # every node reported
     trace = prof.trace()
-    assert trace["version"] == 5
+    assert trace["version"] == 6
     assert trace["meta"]["bins"] == ex.device_labels
     assert trace["meta"]["policy"] == "balanced"
     # v3: one serialized bin descriptor per slot, labels matching
@@ -663,7 +663,7 @@ def test_replay_uses_recorded_bins_and_durations():
 
 
 # ----------------------------------------------------------------------
-# Scheduler.reschedule edge cases (dynamic re-placement, PR 2)
+# measured-load rebalance edge cases (dynamic re-placement, PR 2)
 # ----------------------------------------------------------------------
 def _eight_groups():
     G = Heteroflow()
@@ -674,6 +674,21 @@ def _eight_groups():
     return G, ks
 
 
+def _reschedule(sched, G, bins, *, measured_load):
+    """Measured-load rebalance via the event loop — the migration-guide
+    recipe (docs/scheduling.md) that replaced the removed
+    ``Scheduler.reschedule()`` shim."""
+    from repro.sched import (SchedulerState, SchedulerUpdate,
+                             apply_assignment, build_groups)
+    groups = build_groups(G)
+    state = SchedulerState(bins)
+    for g in groups:
+        state.add_group(g)
+    state.measured_load = measured_load
+    sched.update(state, SchedulerUpdate(), graph=G)
+    return apply_assignment(G, groups, bins, state.assignment)
+
+
 @pytest.mark.parametrize("policy", ["balanced", "heft"])
 def test_reschedule_empty_measurement_window(policy):
     """A window with no measured load (empty dict or all-zero seconds)
@@ -681,7 +696,7 @@ def test_reschedule_empty_measurement_window(policy):
     for measured in ({}, {0: 0.0, 1: 0.0}):
         G, _ = _eight_groups()
         sched = get_scheduler(policy)
-        pl = sched.reschedule(G, BINS, measured_load=measured)
+        pl = _reschedule(sched, G, BINS, measured_load=measured)
         G2, _ = _eight_groups()
         base = get_scheduler(policy).schedule(G2, BINS)
         assert sorted(pl.values()) == sorted(base.values())
@@ -692,8 +707,8 @@ def test_reschedule_empty_measurement_window(policy):
 def test_reschedule_single_bin_topology(policy):
     """One bin: every group lands on it regardless of measured load."""
     G, ks = _eight_groups()
-    pl = get_scheduler(policy).reschedule(G, ["only"],
-                                          measured_load={0: 123.4})
+    pl = _reschedule(get_scheduler(policy), G, ["only"],
+                     measured_load={0: 123.4})
     assert set(pl.values()) == {"only"}
     assert len(pl) == len(G)
 
