@@ -89,6 +89,7 @@ import dataclasses
 import json
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -101,6 +102,7 @@ from benchmarks.workloads import (
     build_random_dag,
     build_serving_trace,
     build_sharded_stack,
+    build_timing_graph,
     serving_specs,
 )
 from repro.configs import DEFAULT_SCHED
@@ -129,6 +131,10 @@ SHAPES = {
                                            with_pushes=False)[0],
     # untagged pipeline: stage-atomic groups, schedulable on plain bins
     "pipeline": lambda: build_pipeline(n_stages=4, n_microbatches=8),
+    # the paper's propagation DAG at sweep size (64 KiB pins so the
+    # copy lane has real work to overlap); the million-task throughput
+    # study runs the same shape at 10^5+ via --shape timing
+    "timing": lambda: build_timing_graph(400, fanout=4, nbytes=65536),
 }
 #: shapes needing a MeshBin in the bin list (capability-tagged kernels);
 #: swept only under ``--bins mesh:NxM``
@@ -524,6 +530,179 @@ def exact_baseline_gate(name: str, payload: dict) -> bool:
     return good
 
 
+def timing_study(args, p) -> int:
+    """Million-task throughput study (``--shape timing``).
+
+    Builds the paper's propagation DAG at ``--nodes`` cells and measures
+    the scheduling *pipeline's* throughput, not simulated makespan:
+
+    * grouping rate (``build_groups``, the affinity phase alone);
+    * ``tasks_placed_per_sec`` of the hierarchical path (grouping →
+      ``coarsen`` → windowed HEFT → expansion, end to end) at full
+      scale, against the uncoarsened whole-graph HEFT baseline at
+      ``min(nodes, 10^4)`` cells — the in-run ratio is the gate, so the
+      number is machine-relative and CI-stable;
+    * placement-quality and fused-dispatch context rows at small scale
+      (simulated makespans; ``dispatch_overhead_us`` is the measured
+      makespan inflation per task under a 5 µs per-dispatch charge,
+      fused vs unfused).
+
+    Hard gates: ``coarse_off_bit_identical`` always; the 10× throughput
+    gate only at >= 10^5 cells (below that the coarse path has nothing
+    to amortize — smaller runs print the ratio as an advisory row).
+    ``--grouping-only`` stops after the grouping rate (the CI smoke
+    mode).  Rates count placed *nodes* (pulls + kernels) per second.
+    """
+    import gc
+
+    from repro.sched import build_groups, hierarchical_schedule
+
+    if args.nodes < 100:
+        p.error(f"--nodes must be >= 100, got {args.nodes}")
+    if args.fanout < 0:
+        p.error(f"--fanout must be >= 0, got {args.fanout}")
+    spec = str(args.bins)
+    if spec == p.get_default("bins"):
+        nbins = 32          # scheduler-study scale (the HEFT-literature
+        #                     norm; the coarse advantage is O(bins) vs
+        #                     O(nodes x bins), so report it at scale)
+    elif spec.isdigit():
+        nbins = int(spec)
+    else:
+        p.error(f"--shape timing needs an integer --bins, got {spec!r}")
+    bins = [f"d{i}" for i in range(nbins)]
+    n, fanout = args.nodes, args.fanout
+    perf = time.perf_counter
+
+    t0 = perf()
+    G = build_timing_graph(n, fanout=fanout)
+    t_build = perf() - t0
+    # GC pauses are comparable to the measured sections at this
+    # allocation volume; park it around every timed region
+    gc.disable()
+    try:
+        t0 = perf()
+        groups = build_groups(G)
+        t_group = perf() - t0
+    finally:
+        gc.enable()
+    rows: dict[str, object] = {
+        "nodes": n, "fanout": fanout, "bins": nbins,
+        "grouping_only": bool(args.grouping_only),
+        "graph_build_s": t_build, "grouping_s": t_group,
+        "groups_per_sec": len(groups) / t_group,
+    }
+    print("study,metric,value")
+    print(f"study,nodes,{n}")
+    print(f"study,bins,{nbins}")
+    print(f"study,graph_build_s,{t_build:.3f}")
+    print(f"study,grouping_s,{t_group:.3f}")
+    print(f"study,groups_per_sec,{len(groups) / t_group:,.0f}")
+
+    ok = True
+    if not args.grouping_only:
+        target, window = args.coarsen_target, args.window
+        base_n = min(n, 10_000)
+        Gb = build_timing_graph(base_n, fanout=fanout)
+        gc.disable()
+        try:
+            t0 = perf()
+            pl_plain = get_scheduler(GATED_POLICY).schedule(Gb, bins)
+            t_r1 = perf() - t0
+            t0 = perf()
+            pl_h = hierarchical_schedule(G, bins, policy=GATED_POLICY,
+                                         target=target, window=window)
+            t_r2 = perf() - t0
+        finally:
+            gc.enable()
+        r1 = len(pl_plain) / t_r1
+        r2 = len(pl_h) / t_r2
+        ratio = r2 / r1
+        rows.update({
+            "coarsen_target": target, "window": window,
+            "baseline_nodes": base_n,
+            "baseline_tasks_per_sec": r1,
+            "tasks_placed_per_sec": r2,
+            "coarse_speedup": ratio,
+        })
+        print(f"study,baseline_tasks_per_sec,{r1:,.0f}")
+        print(f"study,tasks_placed_per_sec,{r2:,.0f}")
+        print(f"study,coarse_speedup,{ratio:.2f}x")
+        complete = len(pl_h) == len(G.nodes)
+        ok &= complete
+        print(f"check,coarse_places_all_nodes,"
+              f"{'PASS' if complete else 'FAIL'},"
+              f"placed={len(pl_h)},nodes={len(G.nodes)}")
+        if n >= 100_000:
+            good = ratio >= 10.0
+            ok &= good
+            print(f"check,coarse_throughput_10x,"
+                  f"{'PASS' if good else 'FAIL'},"
+                  f"hierarchical={r2:,.0f}/s,baseline={r1:,.0f}/s,"
+                  f"ratio={ratio:.2f}x")
+
+        # default-off bit-identity: the hierarchical entry point with
+        # both knobs at 0 must be the plain scheduler, placement for
+        # placement (same discipline as budgets_off_bit_identical)
+        pl_off = hierarchical_schedule(Gb, bins, policy=GATED_POLICY)
+        same = pl_off == pl_plain
+        ok &= same
+        print(f"check,coarse_off_bit_identical,"
+              f"{'PASS' if same else 'FAIL'},nodes={base_n}")
+
+        # placement quality at baseline scale: simulate the exact and
+        # the coarse placement under the default model (advisory — the
+        # coarse path trades quality for throughput by design)
+        model = CostModel()
+        bt = max(2, target * base_n // max(n, 1))
+        pl_hb = hierarchical_schedule(Gb, bins, policy=GATED_POLICY,
+                                      target=bt, window=window)
+        ms_exact = simulate(Gb, pl_plain, bins, cost_model=model).makespan
+        ms_coarse = simulate(Gb, pl_hb, bins, cost_model=model).makespan
+        rows.update({
+            "makespan_exact_s": ms_exact,
+            "makespan_coarse_s": ms_coarse,
+            "coarse_makespan_ratio": (ms_coarse / ms_exact
+                                      if ms_exact > 0 else 1.0),
+        })
+        print(f"study,makespan_exact_ms,{ms_exact * 1e3:.4f}")
+        print(f"study,makespan_coarse_ms,{ms_coarse * 1e3:.4f}")
+
+        # fused batch dispatch: the simulator charges a 5 us per-unit
+        # dispatch cost; fusing runs of <=16 same-bin tasks must recover
+        # most of it (Executor(fuse_batch=N) mirrors this charging)
+        ov = 5e-6
+        Gd = build_timing_graph(2_000, fanout=fanout)
+        pl_d = get_scheduler(GATED_POLICY).schedule(Gd, bins)
+        nd = len(Gd.nodes)
+        m_ov = CostModel(dispatch_overhead_s=ov)
+        ms0 = simulate(Gd, pl_d, bins, cost_model=model).makespan
+        msu = simulate(Gd, pl_d, bins, cost_model=m_ov).makespan
+        msf = simulate(Gd, pl_d, bins, cost_model=m_ov,
+                       fuse_batch=16).makespan
+        ou = (msu - ms0) / nd * 1e6
+        of = (msf - ms0) / nd * 1e6
+        rows.update({
+            "dispatch_overhead_s": ov,
+            "dispatch_overhead_us": ou,
+            "dispatch_overhead_us_fused": of,
+        })
+        print(f"study,dispatch_overhead_us,{ou:.3f}")
+        print(f"study,dispatch_overhead_us_fused,{of:.3f}")
+        good = msf < msu
+        ok &= good
+        print(f"check,fused_dispatch_cheaper,"
+              f"{'PASS' if good else 'FAIL'},"
+              f"fused={msf * 1e3:.4f}ms,unfused={msu * 1e3:.4f}ms")
+
+    if args.json:
+        payload = {"version": 2, "study": "timing", "timing_study": rows}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"json,{args.json}")
+    return 0 if ok else 1
+
+
 def chaos_study(args, bins: list, shapes: list[str], policies: list[str],
                 model: CostModel) -> bool:
     """Fault-injected twin study (``--chaos``): replay every plain-shape
@@ -685,7 +864,28 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--write-baseline", metavar="PATH",
                    help="write the gated policy's makespans as a new "
                         "baseline JSON and exit")
+    p.add_argument("--shape", choices=("timing",),
+                   help="run a single-shape scale study INSTEAD of the "
+                        "sweep (only 'timing': the propagation DAG at "
+                        "--nodes cells, measuring scheduling throughput "
+                        "of the coarsened windowed-HEFT path)")
+    p.add_argument("--nodes", type=int, default=100_000,
+                   help="cell count for --shape timing (the 10x "
+                        "throughput gate only arms at >= 100000)")
+    p.add_argument("--fanout", type=int, default=4,
+                   help="max fan-in per cell for --shape timing")
+    p.add_argument("--grouping-only", action="store_true",
+                   help="with --shape timing: stop after the affinity "
+                        "grouping rate (the fast CI smoke mode)")
+    p.add_argument("--coarsen-target", type=int, default=2_000,
+                   help="super-group count for the coarse path")
+    p.add_argument("--window", type=int, default=256,
+                   help="windowed-HEFT window (groups per rank/place "
+                        "round) for the coarse path")
     args = p.parse_args(argv)
+
+    if args.shape:
+        return timing_study(args, p)
 
     try:
         args.parsed_speeds = (tuple(float(s) for s in args.speeds.split(","))

@@ -10,6 +10,11 @@
   host(partition) → kernel(bipartite matching)`` with a dependency into
   the next iteration — irregular and dependent, the workload where the
   paper observes saturation (~20 cores, 1 GPU sufficient).
+* :func:`build_timing_graph` — the paper's *propagation DAG* proper: one
+  arrival-time kernel per cell with bounded fan-in from nearby upstream
+  cells (netlist locality), not independent view pipelines.  Scales to
+  10⁵–10⁶ nodes; the shape behind ``sched_bench.py --shape timing`` and
+  ``examples/timing_analysis.py --cells-per-view``.
 
 Synthetic **scheduler-study shapes** (consumed by
 ``benchmarks/sched_bench.py`` and ``tests/test_sched.py``; estee-style):
@@ -126,6 +131,70 @@ def build_detailed_placement(n_iters: int, n_cells: int = 256):
             prev_tail.precede(mis)        # iteration dependency
         prev_tail = sink
     return G, objective
+
+
+def build_timing_graph(n_cells: int, fanout: int = 4, *,
+                       nbytes: int = 256, window: int | None = None,
+                       seed: int = 0):
+    """Static-timing propagation DAG (paper §IV-A at netlist scale).
+
+    One *cell* = one pull (its delay table) + one arrival-time kernel;
+    cell ``i`` consumes the arrival times of up to ``fanout`` upstream
+    cells drawn from a locality ``window`` of recent indices — the
+    bounded-fan-in, mostly-local wiring of a real netlist, and the shape
+    where coarsening pays (heavy local edges, long global critical
+    path).  Kernels are executable end to end: each returns
+    ``max(upstream arrivals) + own delay``, so small instances run under
+    the executor and placement policies can be compared bit-for-bit.
+
+    All randomness is drawn vectorized up front from one seeded
+    generator — a 10⁵-cell graph builds in a couple of seconds and two
+    calls with equal arguments yield identical graphs (the determinism
+    ``sched_bench``'s baseline gate relies on).  Every kernel reads the
+    *same* operand array, so graph memory stays O(1) in ``n_cells``
+    while each cell still owns a distinct pull node (one affinity group
+    per cell, Algorithm 1).
+
+    Returns the graph alone — sinks are the last-layer kernels; callers
+    that execute it read results off the kernel tasks.
+    """
+    if n_cells < 1:
+        raise ValueError("n_cells must be >= 1")
+    if fanout < 0:
+        raise ValueError("fanout must be >= 0")
+    W = max(1, 16 * max(fanout, 1)) if window is None else max(1, window)
+    rng = np.random.default_rng(seed)
+    # vectorized draws: per-cell delay, per-cell fan-in count, and the
+    # back-offsets into the locality window (one rng call each — a
+    # per-cell default_rng round-trip is ~100x slower at this scale)
+    delays = (1.0 + 4.0 * rng.random(n_cells)).astype(np.float64)
+    n_in = rng.integers(1, fanout + 1, size=n_cells) if fanout else None
+    offs = ((rng.random((n_cells, max(fanout, 1))) * W).astype(np.int64) + 1
+            if fanout else None)
+    operand = np.full(max(1, nbytes // 8), 1.0, np.float64)
+
+    G = Heteroflow("timing_graph")
+    kernels: list = []
+    for i in range(n_cells):
+        p = G.pull(operand, name=f"pin{i}")
+        deps = []
+        if fanout and i > 0:
+            seen = set()
+            for j in range(n_in[i]):
+                s = i - int(offs[i, j])
+                if s >= 0 and s not in seen:
+                    seen.add(s)
+                    deps.append(kernels[s])
+
+        def arrival(own, *ups, d=float(delays[i])):
+            base = max(float(np.asarray(u)) for u in ups) if ups else 0.0
+            return base + d * float(np.asarray(own)[0])
+
+        k = G.kernel(arrival, p, *deps, cost=float(delays[i]),
+                     name=f"cell{i}")
+        k.succeed(p, *deps)
+        kernels.append(k)
+    return G
 
 
 # ----------------------------------------------------------------------

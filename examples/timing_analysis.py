@@ -10,6 +10,16 @@ of paper Fig. 6 on CPU.
     # profile-guided loop: record a trace, then predict from it
     PYTHONPATH=src python examples/timing_analysis.py --profile /tmp/trace.json
     PYTHONPATH=src python examples/timing_analysis.py --calibrate /tmp/trace.json
+
+``--cells-per-view N`` switches from the per-view pipelines to the
+paper's propagation DAG proper: ``views * N`` arrival-time cells with
+bounded fan-in from nearby upstream cells (netlist locality), the shape
+``benchmarks/sched_bench.py --shape timing`` scales to 10^5+.  Scaling
+``--views`` then grows one connected graph instead of adding disjoint
+pipelines, so the reported rate is cells/s:
+
+    PYTHONPATH=src python examples/timing_analysis.py --views 16 \
+        --cells-per-view 100 --workers 4
 """
 import argparse
 import os
@@ -19,9 +29,9 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.workloads import build_timing_analysis
+from benchmarks.workloads import build_timing_analysis, build_timing_graph
 from repro.configs import DEFAULT_SCHED
-from repro.core import Executor
+from repro.core import Executor, TaskType
 from repro.sched import (
     CostModel,
     TaskProfiler,
@@ -58,13 +68,25 @@ def main():
                    action="store_false",
                    default=DEFAULT_SCHED.steal_locality,
                    help="random-victim stealing instead of locality-aware")
+    p.add_argument("--cells-per-view", type=int, default=0,
+                   help="propagation-DAG mode: one connected "
+                        "views*N-cell arrival-time graph instead of N "
+                        "disjoint view pipelines (0 = legacy mode)")
+    p.add_argument("--fanout", type=int, default=4,
+                   help="max fan-in per cell in propagation-DAG mode")
     args = p.parse_args()
+    if args.cells_per_view < 0:
+        p.error("--cells-per-view must be >= 0")
 
     model = (CostModel.fit(load_trace(args.calibrate)) if args.calibrate
              else CostModel(device_speed=DEFAULT_SCHED.device_speed))
     workers = (1, 2, 4) if args.sweep else (args.workers,)
+    n_cells = args.views * args.cells_per_view
     for w in workers:
-        G, outs = build_timing_analysis(args.views)
+        if n_cells:
+            G, outs = build_timing_graph(n_cells, fanout=args.fanout), None
+        else:
+            G, outs = build_timing_analysis(args.views)
         profiler = TaskProfiler() if args.profile else None
         t0 = time.perf_counter()
         with Executor(num_workers=w, scheduler=args.policy,
@@ -78,14 +100,25 @@ def main():
             ex.run_n(G, args.repeat).result(timeout=600)
             st = ex.stats()
         dt = time.perf_counter() - t0
-        done = sum(1 for o in outs if (o != 0).any())
         extra = " [calibrated]" if args.calibrate else ""
         if args.replace_every:
             extra += f" replacements={st['replacements']}"
-        print(f"workers={w} policy={args.policy}: {args.views} views x "
-              f"{args.repeat} in {dt:.2f}s "
-              f"({args.views * args.repeat / dt:.1f} views/s), "
-              f"{done} models fitted; simulated {sim.summary()}{extra}")
+        if outs is None:
+            arrivals = [n.state["result"] for n in G.nodes
+                        if n.type is TaskType.KERNEL
+                        and n.state.get("result") is not None]
+            print(f"workers={w} policy={args.policy}: {n_cells} cells "
+                  f"({args.views} views x {args.cells_per_view}) x "
+                  f"{args.repeat} in {dt:.2f}s "
+                  f"({n_cells * args.repeat / dt:.0f} cells/s), "
+                  f"{len(arrivals)} arrivals, worst "
+                  f"{max(arrivals):.3f}; simulated {sim.summary()}{extra}")
+        else:
+            done = sum(1 for o in outs if (o != 0).any())
+            print(f"workers={w} policy={args.policy}: {args.views} views x "
+                  f"{args.repeat} in {dt:.2f}s "
+                  f"({args.views * args.repeat / dt:.1f} views/s), "
+                  f"{done} models fitted; simulated {sim.summary()}{extra}")
         if profiler is not None:
             # one trace per sweep point — don't clobber earlier runs
             path = (args.profile if len(workers) == 1

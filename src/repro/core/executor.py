@@ -105,6 +105,40 @@ class _Worker:
         self.bin_busy: dict[str, float] = {}
 
 
+#: task types fused batch dispatch may coalesce — device-bin work whose
+#: per-task dispatch overhead (deque round trip, span, device scope)
+#: dominates at tiny task sizes.  Host tasks stay unfused: they have no
+#: bin identity and their callbacks routinely block.
+_FUSABLE = frozenset((TaskType.KERNEL, TaskType.PULL, TaskType.PUSH))
+
+
+class _FusedBatch:
+    """A run of simultaneously-ready same-bin same-type tasks dispatched
+    as ONE unit (``Executor(fuse_batch=N)``).
+
+    Ducks the ``Node`` surface the dispatch path touches (``type`` /
+    ``bin_key`` / ``device`` / ``topology`` / ``id`` / ``name`` /
+    ``state``), so deques, stealing, and locality heuristics handle it
+    unchanged.  Members were all ready when the batch formed — mutually
+    independent by definition — so running them back-to-back inside one
+    device scope cannot change any result, only shave per-task overhead.
+    """
+
+    __slots__ = ("nodes", "type", "bin_key", "device", "topology", "id",
+                 "name", "state")
+
+    def __init__(self, nodes: Sequence[Node]):
+        head = nodes[0]
+        self.nodes = list(nodes)
+        self.type = head.type
+        self.bin_key = head.bin_key
+        self.device = head.device
+        self.topology = head.topology
+        self.id = head.id
+        self.name = f"fused[{len(self.nodes)}]:{head.name}"
+        self.state = {"stage": head.state.get("stage")}
+
+
 def _head_bin(v: _Worker) -> str | None:
     """Bin label of the node a thief would steal from ``v`` (deque head).
 
@@ -179,6 +213,18 @@ class Executor:
         demoted to the observed speed and a re-placement window runs
         (the ``migrate_top_k`` path when configured).
     straggler_alpha: EWMA smoothing factor for the detector.
+    fuse_batch: if >= 2, fused batch dispatch is on: when a finished
+        task readies a run of same-bin, same-type, same-stage successors,
+        up to this many of them are coalesced into ONE dispatch unit —
+        a single deque round trip, one observability span, one device
+        scope entry, one profiler record (first member's identity,
+        summed cost) — and their results fan back out individually.
+        Members of a batch are simultaneously ready, hence mutually
+        independent: outputs are bit-identical to unfused execution.
+        This kills the per-task Python/lock/span overhead that dominates
+        at million-task scale (the paper's tiny VLSI timing tasks).  The
+        default ``0`` leaves every dispatch path byte-for-byte untouched.
+        Caveats in docs/scheduling.md "Million-task scale".
     """
 
     def __init__(
@@ -197,6 +243,7 @@ class Executor:
         chaos: Any = None,
         straggler_threshold: float = 0.0,
         straggler_alpha: float = 0.4,
+        fuse_batch: int = 0,
     ):
         from ..sched import get_scheduler  # lazy: sched imports core
         if num_workers is None:
@@ -208,6 +255,9 @@ class Executor:
             raise ValueError("replace_every must be >= 0")
         if migrate_top_k < 0:
             raise ValueError("migrate_top_k must be >= 0")
+        if fuse_batch < 0:
+            raise ValueError("fuse_batch must be >= 0")
+        self._fuse_batch = fuse_batch
         self._migrate_top_k = migrate_top_k
         self.devices = list(devices) if devices is not None else list(jax.devices())
         if not self.devices:
@@ -778,6 +828,8 @@ class Executor:
     # scheduling internals
     # ------------------------------------------------------------------
     def _bulk_enqueue(self, nodes: Sequence[Node]) -> None:
+        if self._fuse_batch >= 2 and len(nodes) > 1:
+            nodes = self._coalesce(nodes)
         w = getattr(self._local, "worker", None)
         if w is not None:
             with w.lock:
@@ -787,6 +839,41 @@ class Executor:
                 self._submit_q.extend(nodes)
         with self._cv:
             self._cv.notify(len(nodes))
+
+    def _coalesce(self, nodes: Sequence[Node]) -> list:
+        """Fold runs of fusable ready nodes into :class:`_FusedBatch`
+        units of at most ``fuse_batch`` members.
+
+        A run extends while type, bin, topology, and pipeline stage all
+        match — the same keys the scheduler placed on, so a batch never
+        straddles a placement boundary.  Unfusable nodes (host tasks,
+        unplaced nodes) pass through in order.
+        """
+        cap = self._fuse_batch
+        out: list = []
+        run: list[Node] = []
+
+        def flush() -> None:
+            if len(run) >= 2:
+                out.append(_FusedBatch(run))
+            else:
+                out.extend(run)
+            run.clear()
+
+        for n in nodes:
+            if n.type not in _FUSABLE or n.bin_key is None:
+                flush()
+                out.append(n)
+                continue
+            if run and (len(run) >= cap
+                        or run[0].type is not n.type
+                        or run[0].bin_key != n.bin_key
+                        or run[0].topology is not n.topology
+                        or run[0].state.get("stage") != n.state.get("stage")):
+                flush()
+            run.append(n)
+        flush()
+        return out
 
     def _pop_local(self, w: _Worker) -> Node | None:
         with w.lock:
@@ -884,6 +971,8 @@ class Executor:
     # task invocation — visitor pattern (paper §III-C)
     # ------------------------------------------------------------------
     def _invoke(self, w: _Worker, node: Node) -> None:
+        if type(node) is _FusedBatch:
+            return self._invoke_batch(w, node)
         topo: Topology = node.topology
         if topo.failed is None:
             # correlation id for arena events fired while this node runs
@@ -936,6 +1025,60 @@ class Executor:
                 if topo.failed is None:
                     topo.failed = e
         self._finish_node(node)
+
+    def _invoke_batch(self, w: _Worker, batch: _FusedBatch) -> None:
+        """Run a fused batch: one span, one device scope, one profiler
+        record (first member's identity, summed cost — the trace shows
+        the batch as a single task; docs note the granularity caveat),
+        then fan completions back out per member.
+
+        Member handlers run in ready order on this worker.  Their inner
+        ``ScopedDeviceContext`` entries are same-target re-entries under
+        the outer scope — no-ops (``core.streams``).  Per-member
+        straggler observation is skipped: the EWMA compares per-task
+        predictions against spans, and a batch span has no single
+        prediction (batched runs still feed per-BIN busy seconds).
+        """
+        topo: Topology = batch.topology
+        if topo.failed is None:
+            sid = (self._obs.begin(batch.name, bin=batch.bin_key,
+                                   lane=lane_kind(batch.type),
+                                   node=batch.id,
+                                   stage=batch.state.get("stage"),
+                                   worker=w.id, iteration=topo.iteration,
+                                   fused=len(batch.nodes))
+                   if self._obs is not None else 0)
+            start = time.perf_counter()
+            try:
+                handler = self._VISITOR[batch.type]
+                with ScopedDeviceContext(batch.device):
+                    for n in batch.nodes:
+                        self._local.current_node = n.id
+                        handler(self, w, n)
+            except BaseException as e:  # noqa: BLE001 — propagate via future
+                topo.failed = e
+            if self._slowdown and batch.bin_key is not None:
+                sl = self._slowdown.get(batch.bin_key)
+                if sl is not None and sl > 1.0:
+                    time.sleep((sl - 1.0) * (time.perf_counter() - start))
+            end = time.perf_counter()
+            if self._obs is not None:
+                self._obs.end(sid, ok=topo.failed is None)
+            try:
+                if batch.bin_key is not None:
+                    w.last_bin = batch.bin_key
+                    if batch.bin_key in w.bin_busy:   # fixed key set
+                        w.bin_busy[batch.bin_key] += end - start
+                if self._profiler is not None:
+                    self._profiler.record(
+                        batch.nodes[0], worker=w.id,
+                        iteration=topo.iteration, start=start, end=end,
+                        cost=sum(self._cost_fn(n) for n in batch.nodes))
+            except BaseException as e:  # noqa: BLE001 — propagate via future
+                if topo.failed is None:
+                    topo.failed = e
+        for n in batch.nodes:
+            self._finish_node(n)
 
     def _invoke_host(self, w: _Worker, node: Node) -> None:
         if node.work is not None:

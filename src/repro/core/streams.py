@@ -205,6 +205,13 @@ def _is_ready(token: Any) -> bool:
     return True
 
 
+#: per-thread stack of active device-scope keys — fused batch dispatch
+#: (``Executor(fuse_batch=N)``) wraps N tasks in ONE outer scope, and the
+#: per-task handlers' inner scopes for the same target must become no-ops
+#: or the batch pays N redundant context entries anyway
+_scope_stack = threading.local()
+
+
 class ScopedDeviceContext(contextlib.AbstractContextManager):
     """RAII-style device scope (paper Listing 13 line 3).
 
@@ -213,6 +220,11 @@ class ScopedDeviceContext(contextlib.AbstractContextManager):
     (``repro.sched.bins``): a device bin unwraps to its ``jax.Device``,
     a mesh bin's pjit'd kernels resolve devices from their operand
     shardings, and a host bin deliberately runs scope-free.
+
+    Re-entrant per thread: entering a scope for the same resolved target
+    as the innermost active scope is a no-op (the outer scope already
+    holds the device) — what makes one fused-batch scope entry cover
+    every member task's own ``with ScopedDeviceContext(...)``.
     """
 
     def __init__(self, device: Any):
@@ -225,19 +237,27 @@ class ScopedDeviceContext(contextlib.AbstractContextManager):
         self._ctx = None
 
     def __enter__(self):
+        stack = getattr(_scope_stack, "keys", None)
+        if stack is None:
+            stack = _scope_stack.keys = []
+        key = (id(self.device), id(self.mesh))
+        if stack and stack[-1] == key:
+            pass                             # same target: re-entry no-op
         # Sub-mesh bins are sharding-driven; only raw Devices can be a
         # jax.default_device target.  A MeshBin with a live mesh enters
         # it (the paper's cudaSetDevice scope, slice-wide) so pspec-based
         # kernels resolve axis names without threading the mesh through.
-        if isinstance(self.device, jax.Device):
+        elif isinstance(self.device, jax.Device):
             self._ctx = jax.default_device(self.device)
             self._ctx.__enter__()
         elif self.mesh is not None:
             self._ctx = self.mesh
             self._ctx.__enter__()
+        stack.append(key)
         return self
 
     def __exit__(self, *exc):
+        _scope_stack.keys.pop()
         if self._ctx is not None:
             self._ctx.__exit__(*exc)
         return False

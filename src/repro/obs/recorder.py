@@ -37,23 +37,41 @@ class SpanRecorder:
     ``capacity`` bounds the ring (oldest entries evicted first).
     ``dump_path``, when set, is where :meth:`on_fault` writes a
     Perfetto-loadable Chrome-trace JSON of the ring's contents.
+    ``sample_every=N`` keeps only every Nth span (see :meth:`begin`);
+    the default of 1 records everything and is byte-identical to the
+    pre-knob recorder.
     """
 
     clock = staticmethod(time.perf_counter)
 
     def __init__(self, capacity: int = DEFAULT_CAPACITY, *,
-                 dump_path: str | None = None) -> None:
+                 dump_path: str | None = None,
+                 sample_every: int = 1) -> None:
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
+        if sample_every < 1:
+            raise ValueError(
+                f"sample_every must be >= 1, got {sample_every}")
         self.capacity = capacity
         self.dump_path = dump_path
+        self.sample_every = sample_every
         self._ring: deque[dict[str, Any]] = deque(maxlen=capacity)
         self._ids = itertools.count(1)
+        self._tick = itertools.count(1)
 
     # -- recording (lock-free) -----------------------------------------
     def begin(self, name: str, *, bin: Any = None, lane: str | None = None,
               node: Any = None, stage: Any = None, **attrs: Any) -> int:
-        """Open a span; returns the span id to pass to :meth:`end`."""
+        """Open a span; returns the span id to pass to :meth:`end`.
+
+        With ``sample_every=N`` (N > 1), only every Nth begin records a
+        span; the rest return ``0``, which :meth:`end` ignores — one
+        atomic counter bump per skipped span, the knob for 10^5+-task
+        runs where even ring appends show up.  Instant events are never
+        sampled (spills, steals, faults are rare and must survive).
+        """
+        if self.sample_every > 1 and next(self._tick) % self.sample_every:
+            return 0
         sid = next(self._ids)
         e: dict[str, Any] = {"ph": "B", "span": sid, "name": name,
                              "ts": self.clock()}
@@ -62,6 +80,8 @@ class SpanRecorder:
         return sid
 
     def end(self, span: int, **attrs: Any) -> None:
+        if span <= 0:     # unsampled begin (sample_every > 1)
+            return
         e: dict[str, Any] = {"ph": "E", "span": span, "ts": self.clock()}
         _put(e, **attrs)
         self._ring.append(e)

@@ -58,6 +58,16 @@ PR 9 after their two-cycle deprecation — drive ``update()`` with
 ``SchedulerState.measured_load`` instead (migration guide in
 docs/scheduling.md "Online scheduling").
 
+Million-task scale (``sched.coarsen``): :func:`coarsen` contracts
+affinity groups into super-groups along heavy edges (acyclic interval
+quotient, cost-spread capped) whose ``agg`` digests let HEFT price a
+candidate in O(1); :func:`windowed_place` feeds any policy topological
+windows of K groups against one persistent state (lane clocks frozen
+between windows); :func:`hierarchical_schedule` chains grouping →
+coarsening → windowed placement → expansion and collapses to the plain
+``schedule()`` path when both knobs are off (bit-identical).  See
+docs/scheduling.md "Million-task scale".
+
 Failure tolerance (PR 8): ``simulate(..., faults=FaultSchedule.kill(t,
 bin))`` injects kill/slow/join events at simulated times with honest
 re-execution charging (``SimReport.n_reexecuted`` /
@@ -109,6 +119,14 @@ from .chaos import (
     demoted_model,
     parse_chaos,
 )
+from .coarsen import (
+    CoarsenPlan,
+    coarsen,
+    group_edges,
+    hierarchical_schedule,
+    toposort_groups,
+    windowed_place,
+)
 from .policies import BalancedBins, Heft, RandomPolicy, RoundRobin
 from .profile import (
     TaskProfiler,
@@ -139,6 +157,8 @@ __all__ = [
     "bin_capabilities", "bin_memory_bytes", "eligible_bins", "describe_bin",
     "bins_from_trace",
     "BalancedBins", "Heft", "RoundRobin", "RandomPolicy",
+    "CoarsenPlan", "coarsen", "group_edges", "toposort_groups",
+    "windowed_place", "hierarchical_schedule",
     "CostModel", "SimReport", "simulate",
     "ArrivalProcess", "poisson", "weak_components",
     "FaultEvent", "FaultSchedule",

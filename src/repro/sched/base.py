@@ -79,6 +79,12 @@ class TaskGroup:
     #: and the simulator charge against ``bin_memory_bytes``.  Zero when
     #: no member declares a span (budget checks then never bind).
     bytes: int = 0
+    #: coarsening aggregates (``repro.sched.coarsen``): super-groups
+    #: carry pre-digested totals (pull count/bytes, kernel cost/count,
+    #: inter-super-group edge bytes) so HEFT's EFT loop is O(1) per
+    #: candidate instead of O(member nodes).  ``None`` (default) for
+    #: ordinary fine groups — every legacy code path is untouched.
+    agg: Any | None = None
 
 
 def node_footprint(t: Node) -> int:
@@ -129,20 +135,41 @@ def build_groups(graph: Heteroflow, cost_fn: CostFn = estimate_node_cost,
                 uf.union(a, t.id)
 
     groups: dict[Hashable, TaskGroup] = {}
+    # hot loop at netlist scale (10^5+ nodes, sched.coarsen): operand
+    # spans are memoized per (source, size) — propagation graphs share
+    # operand arrays across cells, so the np.asarray round-trip in
+    # ``_nbytes`` collapses to one call per distinct span — and the
+    # default cost metric is inlined because it re-derives the very span
+    # the footprint just produced.  Same values as the naive loop,
+    # byte for byte; custom ``cost_fn``s take the general path.
+    default_cost = cost_fn is estimate_node_cost
+    span_memo: dict[tuple[int, Any], int] = {}
     for t in nodes:
-        if t.type not in (TaskType.KERNEL, TaskType.PULL):
+        tt = t.type
+        if tt is not TaskType.KERNEL and tt is not TaskType.PULL:
             continue
+        st = t.state
         r = uf.find(t.id)
         g = groups.get(r)
         if g is None:
             g = groups[r] = TaskGroup(root=r, order=len(groups))
         g.nodes.append(t)
-        g.cost += cost_fn(t)
-        g.bytes += node_footprint(t)
-        req = t.state.get("requires")
+        if tt is TaskType.PULL:
+            key = (id(st.get("source")), st.get("size"))
+            nb = span_memo.get(key)
+            if nb is None:
+                nb = span_memo[key] = int(
+                    _nbytes(st.get("source"), st.get("size")))
+            g.bytes += nb
+            g.cost += (float(nb) or 1.0) if default_cost else cost_fn(t)
+        else:
+            g.bytes += int(st.get("activation_bytes", 0))
+            g.cost += (float(st.get("cost", 1.0)) if default_cost
+                       else cost_fn(t))
+        req = st.get("requires")
         if req:
             g.requires = g.requires | req
-        sid = t.state.get("stage")
+        sid = st.get("stage")
         if sid is not None:
             if g.stage_id is not None and g.stage_id != sid:
                 raise ValueError(
@@ -151,7 +178,7 @@ def build_groups(graph: Heteroflow, cost_fn: CostFn = estimate_node_cost,
                     f"stages breaks stage atomicity; duplicate it or "
                     f"drop the stage tags")
             g.stage_id = sid
-        pin = t.state.get("sharding")
+        pin = st.get("sharding")
         if pin is not None:
             if g.pin is not None and g.pin is not pin:
                 raise ValueError(

@@ -317,6 +317,12 @@ class Heft(Scheduler):
         """
         if not groups:
             return {}
+        if all(g.agg is not None for g in groups):
+            # coarsened super-groups (repro.sched.coarsen): price EFT
+            # from the pre-digested aggregates in O(bins) per group
+            # instead of O(member nodes × bins) — the windowed coarse
+            # path never pays per-node work here
+            return self._place_aggregate(state, groups)
         model = self.cost_model
         bins = state.bins
         live = sorted(state.live)
@@ -394,23 +400,7 @@ class Heft(Scheduler):
         # the last event start with idle (zero) lanes.
         overlap = model.lane_depth >= 2
         caps = [bin_memory_bytes(b) for b in bins]
-        copy_free: list[list[float]] = sc.get("copy_free")
-        if copy_free is None:
-            init_s = [bin_load(state.initial_load, bins, i)
-                      / (model.compute_rate * (model.speed(i) or 1.0))
-                      for i in range(len(bins))]
-            copy_free = [[init_s[i]] * bin_lane_width(bins[i])
-                         for i in range(len(bins))]
-            compute_free = ([list(s) for s in copy_free] if overlap
-                            else copy_free)
-            sc["copy_free"], sc["compute_free"] = copy_free, compute_free
-        else:
-            compute_free = sc["compute_free"]
-            while len(copy_free) < len(bins):      # bins added by events
-                lanes = [0.0] * bin_lane_width(bins[len(copy_free)])
-                copy_free.append(lanes)
-                if overlap:
-                    compute_free.append(list(lanes))
+        copy_free, compute_free = self._lane_clocks(state, sc, overlap)
         finish: dict[Hashable, float] = sc.setdefault("finish", {})
         start_c: dict[Hashable, float] = sc.setdefault("start_c", {})
         cell_t: dict[Hashable, float] = sc.setdefault("cell_t", {})
@@ -497,6 +487,150 @@ class Heft(Scheduler):
                 _occupy(copy_free[idx], copy_done)
             if kern_t > 0 or not overlap:
                 _occupy(compute_free[idx], eft)
+        return delta
+
+    def _lane_clocks(self, state: SchedulerState, sc: dict,
+                     overlap: bool) -> tuple[list, list]:
+        """Per-bin per-server lane availability, persisted in scratch
+        (shared by the exact and aggregate EFT paths — see the long
+        comment at the exact path's call site for the model)."""
+        model = self.cost_model
+        bins = state.bins
+        copy_free: list[list[float]] = sc.get("copy_free")
+        if copy_free is None:
+            init_s = [bin_load(state.initial_load, bins, i)
+                      / (model.compute_rate * (model.speed(i) or 1.0))
+                      for i in range(len(bins))]
+            copy_free = [[init_s[i]] * bin_lane_width(bins[i])
+                         for i in range(len(bins))]
+            compute_free = ([list(s) for s in copy_free] if overlap
+                            else copy_free)
+            sc["copy_free"], sc["compute_free"] = copy_free, compute_free
+        else:
+            compute_free = sc["compute_free"]
+            while len(copy_free) < len(bins):      # bins added by events
+                lanes = [0.0] * bin_lane_width(bins[len(copy_free)])
+                copy_free.append(lanes)
+                if overlap:
+                    compute_free.append(list(lanes))
+        return copy_free, compute_free
+
+    def _place_aggregate(self, state: SchedulerState,
+                         groups: Sequence[TaskGroup],
+                         ) -> dict[Hashable, int]:
+        """EFT over coarsened super-groups from their ``agg`` digests.
+
+        Same clocks, same scratch, same spill penalty and pin handling
+        as the exact path — but pull time is
+        ``n_pulls·latency + pull_bytes/h2d`` and kernel time is
+        ``kern_cost/(compute_rate·speed)``, both O(1) per candidate.
+        Exact when the model has no per-codelet ``kernel_rates`` (every
+        kernel then runs at the aggregate rate with zero fixed latency);
+        with fitted histories, or α-β collective sync on sharded
+        groups, the digest is an approximation — acceptable for a
+        coarse pass whose decisions only steer locality, never
+        correctness.  Ranks are computed at group granularity from the
+        super-DAG edges, within the window (successors in later windows
+        are unknown futures, the same horizon the exact event-local
+        ranking has).
+        """
+        model = self.cost_model
+        bins = state.bins
+        live = sorted(state.live)
+        mean_speed = (sum(model.speed(i) for i in live) / len(live)) or 1.0
+        sc = state.scratch.setdefault("heft", {})
+        # in-edges accumulate across windows: the linearization order is
+        # the window order, so a predecessor registers its out-edges
+        # before any window containing a consumer runs
+        in_edges: dict[Hashable, list] = sc.setdefault("agg_in", {})
+        for g in groups:
+            for s, nb in g.agg["out_edges"].items():
+                in_edges.setdefault(s, []).append((g.root, nb))
+
+        def agg_w(g: TaskGroup, speed: float) -> float:
+            a = g.agg
+            pull = (a["n_pulls"] * model.latency_s
+                    + a["pull_bytes"] / model.h2d_bandwidth)
+            kern = a["kern_cost"] / (model.compute_rate * (speed or 1.0))
+            return pull + kern
+
+        rank: dict[Hashable, float] = {}
+        for g in sorted(groups, key=lambda g: -g.order):
+            best = 0.0
+            for s, nb in g.agg["out_edges"].items():
+                r = rank.get(s)
+                if r is not None:
+                    best = max(best, model.transfer_time(nb) + r)
+            rank[g.root] = agg_w(g, mean_speed) + best
+
+        overlap = model.lane_depth >= 2
+        caps = [bin_memory_bytes(b) for b in bins]
+        copy_free, compute_free = self._lane_clocks(state, sc, overlap)
+        finish: dict[Hashable, float] = sc.setdefault("finish", {})
+        start_c: dict[Hashable, float] = sc.setdefault("start_c", {})
+        cell_t: dict[Hashable, float] = sc.setdefault("cell_t", {})
+        placed = state.assignment
+        delta: dict[Hashable, int] = {}
+        for g in sorted(groups, key=lambda g: (-rank[g.root], g.order)):
+            a = g.agg
+            pinned = self._pinned_index(g, bins)
+            if pinned is not None and pinned not in state.live:
+                pinned = None
+            wide = "mesh" in g.requires
+            candidates = (state.candidates(g) if pinned is None
+                          else (pinned,))
+            pull_t = (a["n_pulls"] * model.latency_s
+                      + a["pull_bytes"] / model.h2d_bandwidth)
+            pred_list = in_edges.get(g.root, ())
+            best: tuple[int, float, float, float] | None = None
+            for i in candidates:
+                data_ready = 0.0
+                for (pg, nbytes) in pred_list:
+                    if pg not in placed:
+                        continue
+                    t_avail = finish.get(pg, 0.0)
+                    if placed[pg] != i:
+                        t_avail += model.transfer_time(
+                            nbytes, bins[placed[pg]], bins[i])
+                    data_ready = max(data_ready, t_avail)
+                scale = _mesh_scale(g, bins[i])
+                avail = max if wide else min
+                copy_avail = avail(copy_free[i])
+                compute_avail = avail(compute_free[i])
+                kern_t = (a["kern_cost"]
+                          / (model.compute_rate * (model.speed(i) or 1.0))
+                          / scale)
+                g_pull_t = pull_t / scale
+                copy_done = (max(data_ready, copy_avail) + g_pull_t
+                             if g_pull_t > 0 else data_ready)
+                eft = (max(copy_done, compute_avail) + kern_t
+                       if kern_t > 0 else max(copy_done, copy_avail))
+                if caps[i] is not None and g.bytes > 0:
+                    over = state.packed[i] + g.bytes - caps[i]
+                    if over > 0:
+                        eft += model.spill_time(over)
+                if best is None or eft < best[1]:
+                    best = (i, eft, copy_done, kern_t)
+            idx, eft, copy_done, kern_t = best
+            state.record(g, idx)
+            delta[g.root] = idx
+            finish[g.root] = eft
+            start_c[g.root] = eft - kern_t
+            cell_t[g.root] = kern_t / max(a["n_kernels"], 1)
+            if wide:
+                if pull_t > 0:
+                    copy_free[idx][:] = [copy_done] * len(copy_free[idx])
+                if kern_t > 0 or not overlap:
+                    compute_free[idx][:] = [eft] * len(compute_free[idx])
+            else:
+                if pull_t > 0:
+                    lanes = copy_free[idx]
+                    lanes[min(range(len(lanes)),
+                              key=lanes.__getitem__)] = copy_done
+                if kern_t > 0 or not overlap:
+                    lanes = compute_free[idx]
+                    lanes[min(range(len(lanes)),
+                              key=lanes.__getitem__)] = eft
         return delta
 
 

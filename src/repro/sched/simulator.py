@@ -239,6 +239,14 @@ class CostModel:
     #: events version-5 traces record; 0 = unset → fall back to
     #: ``h2d_bandwidth`` (the spill path rides the same PCIe link).
     spill_bandwidth: float = 0.0
+    #: fixed seconds of dispatch overhead charged per dispatch UNIT —
+    #: the deque round trip / span / device-scope entry the executor
+    #: pays per task.  With ``simulate(..., fuse_batch=N)`` a run of
+    #: consecutive same-lane same-bin dispatches shares ONE charge per
+    #: batch of ≤ N (mirroring ``Executor(fuse_batch=N)``); unfused,
+    #: every task pays it.  Default 0 = off → bit-identical to every
+    #: pre-existing baseline.
+    dispatch_overhead_s: float = 0.0
     cost_fn: Callable[[Node], float] = estimate_node_cost
 
     def __post_init__(self) -> None:
@@ -653,6 +661,7 @@ def simulate(
     faults: "FaultSchedule | None" = None,
     fault_policy: Any = "balanced",
     metrics: Any = None,
+    fuse_batch: int = 0,
 ) -> SimReport:
     """Simulate ``graph`` under a ``{node.id: bin}`` placement.
 
@@ -687,11 +696,20 @@ def simulate(
     the report's headline figures via :func:`publish_report` after the
     simulation completes; the simulated numbers themselves are
     untouched (instrumentation never perturbs the model).
+
+    ``fuse_batch`` mirrors ``Executor(fuse_batch=N)`` for the
+    ``CostModel.dispatch_overhead_s`` charge: unfused (``0``), every
+    task pays the overhead; fused (``>= 2``), a run of consecutive
+    same-lane same-bin dispatches shares one charge per batch of ≤ N.
+    With ``dispatch_overhead_s`` at its 0 default the knob is inert and
+    every duration is bit-identical to pre-existing baselines.
     """
     model = cost_model or CostModel()
     if faults is not None and replay is not None:
         raise ValueError("faults= and replay= are mutually exclusive "
                          "(replayed durations embed the real pool)")
+    if fuse_batch < 0:
+        raise ValueError("fuse_batch must be >= 0")
     overlap = model.lane_depth >= 2
     order = graph.topological_order()
     if order is None:
@@ -822,10 +840,28 @@ def simulate(
     events: list[tuple[float, int]] = []          # (finish_time, node.id)
     node_by_id = {n.id: n for n in graph.nodes}
 
+    # dispatch-overhead charging (inert at the 0.0 default): _fuse_run
+    # tracks the (lane, bin) and length of the current coalescible run —
+    # the simulator's stand-in for the executor's _coalesce() batches
+    ov_s = model.dispatch_overhead_s
+    _fuse_run: list = [None, 0]           # [(kind, bin), members so far]
+
     def dispatch(n: Node, ready_t: float) -> None:
         nonlocal host_busy, n_spills, spill_seconds
         kind, b = res_of[n.id]
         dur = duration(n, b)
+        if ov_s > 0.0:
+            if fuse_batch >= 2:
+                fusable = kind != _HOST_LANE
+                if (fusable and _fuse_run[0] == (kind, b)
+                        and _fuse_run[1] < fuse_batch):
+                    _fuse_run[1] += 1     # rides the open batch: no charge
+                else:                     # new batch (host breaks the run)
+                    _fuse_run[0] = (kind, b) if fusable else None
+                    _fuse_run[1] = 1
+                    dur += ov_s
+            else:
+                dur += ov_s               # per-task overhead, unfused
         if kind != _HOST_LANE:
             fp = node_footprint(n)
             if fp > 0:

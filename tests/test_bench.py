@@ -206,3 +206,70 @@ def test_timeline_study_writes_perfetto_trace(capsys, tmp_path):
     procs = [e["args"]["name"] for e in tl["traceEvents"]
              if e.get("ph") == "M" and e["name"] == "process_name"]
     assert len(procs) == 2 * len(set(procs))   # measured + simulated twin
+
+
+def test_build_timing_graph_shape_and_determinism():
+    """2 nodes per cell (pin pull + arrival kernel), bounded fan-in,
+    and bit-identical structure across equal-argument calls."""
+    from workloads import build_timing_graph
+
+    n, fanout = 300, 4
+    G1 = build_timing_graph(n, fanout=fanout)
+    G2 = build_timing_graph(n, fanout=fanout)
+    assert len(G1.nodes) == 2 * n
+    deps1, deps2 = [], []
+    for G, deps in ((G1, deps1), (G2, deps2)):
+        for nd in G.nodes:
+            if nd.name.startswith("cell"):
+                ups = sorted(d.name for d in nd.dependents)
+                deps.append((nd.name, ups))
+                # own pin + at most `fanout` upstream cells
+                assert len(ups) <= 1 + fanout, nd.name
+    assert deps1 == deps2
+    assert build_timing_graph(50, fanout=2).nodes[0].name != ""
+
+
+def test_build_timing_graph_executes_and_propagates():
+    """Arrival times are monotone along dependencies (max-plus over
+    positive delays), so downstream cells finish strictly later."""
+    import numpy as np
+    from repro.core import Executor
+    from workloads import build_timing_graph
+
+    G = build_timing_graph(120, fanout=3)
+    with Executor(num_workers=2) as ex:
+        ex.run(G).result(timeout=120)
+    arr = {nd.name: float(np.asarray(nd.state["result"]))
+           for nd in G.nodes if nd.name.startswith("cell")}
+    assert len(arr) == 120 and all(v > 0 for v in arr.values())
+    for nd in G.nodes:
+        if not nd.name.startswith("cell"):
+            continue
+        for up in nd.dependents:
+            if up.name.startswith("cell"):
+                assert arr[nd.name] > arr[up.name]
+
+
+def test_timing_study_small_scale_smoke(tmp_path):
+    """The --shape timing study end to end at toy scale: all rows
+    present, bit-identity check green, gate advisory (nodes < 1e5)."""
+    out = tmp_path / "ts.json"
+    rc = sched_bench.main(["--shape", "timing", "--nodes", "2000",
+                           "--bins", "4", "--json", str(out)])
+    assert rc == 0
+    rows = json.loads(out.read_text())["timing_study"]
+    for key in ("grouping_s", "groups_per_sec", "tasks_placed_per_sec",
+                "baseline_tasks_per_sec", "coarse_speedup",
+                "dispatch_overhead_us", "dispatch_overhead_us_fused"):
+        assert key in rows, key
+    assert rows["bins"] == 4
+
+
+def test_timing_study_grouping_only_smoke(tmp_path):
+    out = tmp_path / "ts.json"
+    rc = sched_bench.main(["--shape", "timing", "--nodes", "2000",
+                           "--grouping-only", "--json", str(out)])
+    assert rc == 0
+    rows = json.loads(out.read_text())["timing_study"]
+    assert rows["grouping_only"] is True
+    assert "tasks_placed_per_sec" not in rows

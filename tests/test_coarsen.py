@@ -1,0 +1,315 @@
+"""sched.coarsen: graph coarsening, windowed HEFT, hierarchical entry
+point, fused batch dispatch, and the union-find grouping rate.
+
+The default-off discipline mirrors ``budgets_off_bit_identical``:
+``hierarchical_schedule`` with both knobs at 0 must equal the plain
+scheduler placement for placement, and ``Executor(fuse_batch=N)`` /
+``simulate(fuse_batch=N)`` must leave results / makespans untouched
+when the knob (or the dispatch charge) is off.
+"""
+import os
+import sys
+import time
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+
+from _hypothesis_compat import given, settings, st
+from repro.core import Executor, Heteroflow, TaskType
+from repro.sched import (
+    CostModel,
+    CoarsenPlan,
+    build_groups,
+    coarsen,
+    get_scheduler,
+    group_edges,
+    hierarchical_schedule,
+    simulate,
+    toposort_groups,
+    windowed_place,
+)
+from repro.sched.profile import producer_bytes
+
+BINS = ["d0", "d1", "d2"]
+POLICIES = ("balanced", "heft", "round_robin", "random")
+
+
+def _kern(G, name, cost, *deps, sharding=None, **kw):
+    p = G.pull(np.zeros(4), name=f"p_{name}", sharding=sharding)
+    k = G.kernel(lambda own, *d: None, p, *deps, cost=cost, name=name, **kw)
+    k.succeed(p, *deps)
+    return k
+
+
+def _diamond():
+    G = Heteroflow("diamond")
+    a = _kern(G, "a", 1.0)
+    b = _kern(G, "b", 2.0, a)
+    c = _kern(G, "c", 3.0, a)
+    _kern(G, "d", 1.0, b, c)
+    return G
+
+
+def _tagged(with_requires=True):
+    """Stages + requires + a pin — every cut rule fires somewhere.
+    (``with_requires=False`` keeps the shape placeable on capability-less
+    string bins for the placement-identity tests.)"""
+    req = {"mesh"} if with_requires else ()
+    G = Heteroflow("tagged")
+    a = _kern(G, "a", 1.0, stage=0)
+    b = _kern(G, "b", 1.0, a, stage=0)
+    c = _kern(G, "c", 1.0, b, stage=1)
+    d = _kern(G, "d", 1.0, c, requires=req)
+    e = _kern(G, "e", 1.0, d, requires=req)
+    f = _kern(G, "f", 1.0, e, sharding="d1")   # pinned group
+    _kern(G, "g", 1.0, f)
+    return G
+
+
+def _random_graph(n, seed, edge_p=0.3):
+    rng = np.random.default_rng(seed)
+    G = Heteroflow(f"rand{seed}")
+    ks = []
+    for i in range(n):
+        deps = [ks[j] for j in range(i) if rng.random() < edge_p]
+        ks.append(_kern(G, f"k{i}", float(1 + rng.integers(0, 5)), *deps))
+    return G
+
+
+def _shuffled_chain(n=12):
+    """Creation order deliberately NOT topological: kernels are created
+    sinks-first via deferred dependency wiring, forcing coarsen off the
+    forward fast path and through the heavy-edge Kahn linearization."""
+    G = Heteroflow("shuffled")
+    ks = [_kern(G, f"k{i}", 1.0) for i in reversed(range(n))]
+    ks.reverse()                      # ks[i] is kernel i, created last-first
+    for i in range(1, n):
+        ks[i].succeed(ks[i - 1])      # dep edge points BACK in group order
+    return G
+
+
+# -- coarsen invariants ------------------------------------------------
+
+def _check_plan(groups, plan):
+    """Partition exactness + conserved totals + exact tags + forward
+    super-DAG — the invariants every coarsening must keep."""
+    assert isinstance(plan, CoarsenPlan)
+    fine_roots = [g.root for g in groups]
+    absorbed = [g.root for mem in plan.members.values() for g in mem]
+    assert sorted(map(str, absorbed)) == sorted(map(str, fine_roots))
+    assert set(plan.members) == {s.root for s in plan.super_groups}
+
+    assert sum(s.cost for s in plan.super_groups) == pytest.approx(
+        sum(g.cost for g in groups))
+    assert sum(s.bytes for s in plan.super_groups) == sum(
+        g.bytes for g in groups)
+    assert sum(len(s.nodes) for s in plan.super_groups) == sum(
+        len(g.nodes) for g in groups)
+
+    pos = {s.root: i for i, s in enumerate(plan.super_groups)}
+    for s in plan.super_groups:
+        for g in plan.members[s.root]:
+            assert g.requires == s.requires
+            assert g.stage_id == s.stage_id
+        if s.pin is None:
+            assert all(g.pin is None for g in plan.members[s.root])
+        assert s.agg is not None
+        for dst in s.agg.get("out_edges", {}):
+            assert pos[dst] > pos[s.root], "super edge must point forward"
+
+
+@pytest.mark.parametrize("target", [1, 2, 4, 100])
+def test_coarsen_preserves_partition_tags_and_deps(target):
+    for build in (_diamond, _tagged, lambda: _random_graph(24, seed=5)):
+        groups = build_groups(build())
+        _check_plan(groups, coarsen(groups, target))
+
+
+def test_coarsen_respects_tag_boundaries():
+    groups = build_groups(_tagged())
+    plan = coarsen(groups, 1)   # maximum merging pressure
+    # even at target=1 the stage/requires/pin cuts force >1 super-group
+    assert len(plan.super_groups) > 1
+    _check_plan(groups, plan)
+
+
+def test_coarsen_rejects_bad_target():
+    groups = build_groups(_diamond())
+    with pytest.raises(ValueError):
+        coarsen(groups, 0)
+
+
+@settings(max_examples=15)
+@given(st.integers(min_value=2, max_value=30),
+       st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=1, max_value=8))
+def test_coarsen_property_random_dags(n, seed, target):
+    groups = build_groups(_random_graph(n, seed))
+    plan = coarsen(groups, target)
+    _check_plan(groups, plan)
+    # expansion covers every fine group on its super-group's bin
+    assign = {s.root: i % 2 for i, s in enumerate(plan.super_groups)}
+    fine = plan.expand(assign)
+    assert set(fine) == {g.root for g in groups}
+
+
+def test_group_edges_weights_match_producer_bytes():
+    """The memoized edge accumulation in group_edges must equal a
+    ground-truth recompute from sched.profile.producer_bytes (the
+    comment in coarsen.py pins this equality)."""
+    G = _random_graph(24, seed=11)
+    groups = build_groups(G)
+    root_of = {}
+    for g in groups:
+        for n in g.nodes:
+            root_of[n.id] = g.root
+    truth = {}
+    for g in groups:
+        for n in g.nodes:
+            for s in n.successors:
+                dst = root_of.get(s.id)
+                if dst is None or dst == g.root:
+                    continue
+                key = (g.root, dst)
+                truth[key] = truth.get(key, 0) + producer_bytes(n)
+    got = group_edges(groups)
+    flat = {(src, dst): b for src, e in got.items()
+            for dst, b in e.items()}
+    assert flat == truth
+
+
+def test_coarsen_handles_non_topological_creation_order():
+    """Sinks-first creation order clears the forward fast path, so this
+    exercises the heavy-edge Kahn linearization."""
+    G = _shuffled_chain(12)
+    groups = build_groups(G)
+    plan = coarsen(groups, 3)
+    _check_plan(groups, plan)
+    order = toposort_groups(groups)
+    assert len(order) == len(groups)
+
+
+# -- windowed placement + hierarchical entry point ---------------------
+
+def test_windowed_equals_whole_graph_when_window_covers():
+    G = _random_graph(20, seed=3)
+    for policy in POLICIES:
+        base = hierarchical_schedule(G, BINS, policy=policy)
+        whole = hierarchical_schedule(G, BINS, policy=policy,
+                                      window=10_000)
+        assert whole == base, policy
+
+
+def test_hierarchical_off_bit_identical():
+    """Both knobs at 0 → the plain scheduler placement, exactly
+    (same discipline as budgets_off_bit_identical)."""
+    for build in (_diamond, lambda: _tagged(with_requires=False),
+                  lambda: _random_graph(20, seed=9)):
+        G = build()
+        for policy in POLICIES:
+            plain = get_scheduler(policy).schedule(G, BINS)
+            assert hierarchical_schedule(G, BINS, policy=policy) == plain
+
+
+def test_hierarchical_on_places_every_node():
+    G = _random_graph(30, seed=4)
+    pl = hierarchical_schedule(G, BINS, policy="heft", target=4, window=2)
+    assert set(pl) == {n.id for n in G.nodes}
+    assert set(pl.values()) <= set(BINS)
+
+
+def test_windowed_place_zero_window_is_single_shot():
+    from repro.sched.base import SchedulerState
+    G = _diamond()
+    groups = build_groups(G)
+    sched = get_scheduler("heft")
+    a = windowed_place(sched, SchedulerState(list(BINS)), groups,
+                       window=0, graph=G)
+    b = windowed_place(sched, SchedulerState(list(BINS)), groups,
+                       window=len(groups) + 5, graph=G)
+    assert a == b
+
+
+# -- fused batch dispatch ----------------------------------------------
+
+def _run(build, policy, fuse):
+    """Run a fresh copy of the graph; return kernel results by name."""
+    G = build()
+    with Executor(num_workers=2, scheduler=policy, fuse_batch=fuse) as ex:
+        ex.run(G).result(timeout=120)
+    return {n.name: np.asarray(n.state["result"]).copy()
+            for n in G.nodes
+            if n.type is TaskType.KERNEL and "result" in n.state}
+
+
+def test_fused_dispatch_bit_identical_results():
+    from workloads import build_chain, build_diamond, build_fanout
+    for build in (build_chain, build_diamond, build_fanout):
+        for policy in POLICIES:
+            base = _run(build, policy, 0)
+            fused = _run(build, policy, 16)
+            assert base, (build, policy)
+            assert base.keys() == fused.keys()
+            for k in base:
+                np.testing.assert_array_equal(base[k], fused[k])
+
+
+def test_simulator_dispatch_overhead_default_off():
+    G = _random_graph(16, seed=2)
+    pl = get_scheduler("heft").schedule(G, BINS)
+    base = simulate(G, pl, BINS, cost_model=CostModel()).makespan
+    fused = simulate(G, pl, BINS, cost_model=CostModel(),
+                     fuse_batch=16).makespan
+    assert fused == base    # no charge → fusion changes nothing
+
+
+def test_simulator_fused_not_worse_under_overhead():
+    G = _random_graph(40, seed=6, edge_p=0.1)
+    pl = get_scheduler("heft").schedule(G, BINS)
+    m = CostModel(dispatch_overhead_s=5e-6)
+    unfused = simulate(G, pl, BINS, cost_model=m).makespan
+    fused = simulate(G, pl, BINS, cost_model=m, fuse_batch=16).makespan
+    no_ov = simulate(G, pl, BINS, cost_model=CostModel()).makespan
+    assert no_ov < fused <= unfused
+
+
+# -- grouping rate (union-find path-halving) ---------------------------
+
+def test_build_groups_near_linear_on_chain():
+    """Iterative path-halving + union by size: doubling a chain's length
+    must not blow grouping time up superlinearly (generous 4x-over-
+    linear bound — this is a smoke rate check, not a benchmark)."""
+    from workloads import build_timing_graph
+
+    def rate(n):
+        G = build_timing_graph(n, fanout=1, window=1)   # a pure chain
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            groups = build_groups(G)
+            best = min(best, time.perf_counter() - t0)
+        assert len(groups) == n
+        return best
+
+    t1, t2 = rate(10_000), rate(40_000)
+    assert t2 < 16 * t1, f"grouping superlinear: {t1:.4f}s -> {t2:.4f}s"
+
+
+# -- the full-scale throughput gate (slow tier) ------------------------
+
+@pytest.mark.slow
+def test_timing_study_gate_at_scale(tmp_path):
+    import json
+
+    import sched_bench
+
+    out = tmp_path / "ts.json"
+    rc = sched_bench.main(["--shape", "timing", "--nodes", "100000",
+                           "--json", str(out)])
+    assert rc == 0
+    rows = json.loads(out.read_text())["timing_study"]
+    assert rows["coarse_speedup"] >= 10.0
+    assert rows["tasks_placed_per_sec"] > rows["baseline_tasks_per_sec"]

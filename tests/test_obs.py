@@ -383,3 +383,55 @@ def test_executor_without_obs_matches_with_obs():
                 for n in G2.nodes if n.state.get("result") is not None)
     assert r1 == r2
     assert ex1.stats()["executed"] == ex2.stats()["executed"]
+
+
+def test_recorder_sample_every_thins_spans_not_events():
+    """sample_every=N keeps every Nth span (unsampled begins return 0,
+    end ignores them) but never drops instant events — spills and
+    faults are rare and must survive the thinning."""
+    r = SpanRecorder(sample_every=4)
+    sids = [r.begin("task") for _ in range(16)]
+    for s in sids:
+        r.end(s)
+    assert sum(1 for s in sids if s) == 4
+    assert len(r.spans()) == 4
+    for _ in range(5):
+        r.event("spill")
+    assert len(r.events("spill")) == 5
+    with r.span("ctx") as sid:      # context manager tolerates sid 0
+        pass
+    with pytest.raises(ValueError):
+        SpanRecorder(sample_every=0)
+
+
+def test_recorder_sample_every_default_records_everything():
+    r = SpanRecorder()
+    sids = [r.begin("task") for _ in range(8)]
+    for s in sids:
+        r.end(s)
+    assert all(sids) and len(r.spans()) == 8
+
+
+def test_histogram_sample_every_thins_observations():
+    h = Histogram("lat", sample_every=3)
+    for i in range(9):
+        h.observe(float(i))
+    assert h.seen == 9
+    assert h.samples == [2.0, 5.0, 8.0]    # every 3rd kept
+    h2 = Histogram("lat2", sample_every=3)
+    h2.extend(float(i) for i in range(9))
+    assert (h2.samples, h2.seen) == (h.samples, h.seen)
+    with pytest.raises(ValueError):
+        Histogram("bad", sample_every=0)
+
+
+def test_registry_sample_every_is_histogram_default():
+    reg = MetricsRegistry(sample_every=5)
+    assert reg.histogram("a").sample_every == 5
+    assert reg.histogram("b", sample_every=1).sample_every == 1
+    # counters/gauges are never sampled; default registry keeps all
+    reg0 = MetricsRegistry()
+    h = reg0.histogram("c")
+    h.extend([1.0, 2.0])
+    assert h.sample_every == 1 and h.count == h.seen == 2
+    assert h.summary()["count"] == 2
